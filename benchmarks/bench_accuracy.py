@@ -1,0 +1,68 @@
+"""Paper Figure 5: accuracy heatmaps (max eval accuracy per scenario).
+
+Real federated training on the synthetic-FEMNIST stand-in. Claims:
+  * every algorithm exceeds 80% given enough aggregation opportunities;
+  * poorly-connected configs (1 station, small constellation) lag;
+  * FedProxSchV2's min-epoch floor repairs FedProxSch's accuracy loss.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import emit, run_scenario
+
+ALGS = ("fedavg", "fedprox", "fedbuff", "fedavg_sched", "fedprox_sched",
+        "fedprox_sched_v2")
+
+
+def run(quick: bool = True, rounds: int = 150):
+    consts = [(2, 5), (5, 10)] if quick else \
+        [(c, s) for c in (1, 2, 5, 10) for s in (2, 5, 10)]
+    stations = (1, 5, 13) if quick else (1, 2, 3, 5, 10, 13)
+    algs = ALGS[:4] if quick else ALGS
+    if quick:
+        algs = ("fedavg", "fedprox", "fedbuff", "fedavg_sched",
+                "fedprox_sched", "fedprox_sched_v2")
+    rows, acc = [], {}
+    for alg in algs:
+        # Async buffer-fills are ~10x shorter than sync round barriers;
+        # the paper compares at equal TIME (500 rounds / 3 months), so
+        # FedBuff gets a time-equivalent round budget.
+        alg_rounds = rounds * 5 if alg == "fedbuff" else rounds
+        for (cl, sp) in consts:
+            for g in stations:
+                res = run_scenario(alg, cl, sp, g, rounds=alg_rounds,
+                                   train=True, eval_every=10)
+                a = res.max_accuracy
+                acc[(alg, cl, sp, g)] = a
+                rows.append((f"max_acc/{alg}/c{cl}s{sp}/g{g}",
+                             round(a, 4), res.n_rounds))
+
+    def chk(name, cond):
+        rows.append((f"claim/{name}", int(bool(cond)), "1=reproduced"))
+
+    well = [(a, k) for k, a in acc.items() if k[3] >= 5 and k[1] * k[2] >= 10]
+    if well:
+        chk("80pct_with_enough_access",
+            all(a >= 0.8 for a, _ in well))
+    poor = acc.get(("fedavg", 5, 10, 1))
+    rich = acc.get(("fedavg", 5, 10, 13))
+    if poor is not None and rich is not None:
+        chk("coverage_improves_accuracy", rich >= poor)
+    v1 = acc.get(("fedprox_sched", 5, 10, 13))
+    v2 = acc.get(("fedprox_sched_v2", 5, 10, 13))
+    if v1 is not None and v2 is not None:
+        chk("schedv2_min_epochs_helps", v2 >= v1 - 0.02)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--rounds", type=int, default=150)
+    args = ap.parse_args(argv)
+    emit(run(quick=not args.full, rounds=args.rounds))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Roofline table (deliverable g): read the dry-run JSON, print per
+(arch x shape) the three terms, dominant bottleneck, and useful-FLOPs
+ratio. Re-run `python -m repro.launch.dryrun --all --out
+results/dryrun_baseline.json` to refresh."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_baseline.json")
+OPTIMIZED = os.path.join(os.path.dirname(__file__), "..", "results",
+                         "dryrun_optimized.json")
+
+
+def run(path: str = RESULTS):
+    rows = _table(path, "base")
+    if os.path.exists(OPTIMIZED):
+        rows += _table(OPTIMIZED, "opt")
+    return rows
+
+
+def _table(path: str, tag: str):
+    if not os.path.exists(path):
+        return [(f"roofline[{tag}]/missing", 0,
+                 f"run dryrun --all --out {path}")]
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    n_ok = n_skip = n_err = 0
+    for r in results:
+        name = f"roofline[{tag}]/{r['arch']}/{r['shape']}"
+        if r["status"] == "skipped":
+            n_skip += 1
+            rows.append((name, "skip", r["note"][:60]))
+            continue
+        if r["status"] != "ok":
+            n_err += 1
+            rows.append((name, "ERROR", r.get("error", "")[:60]))
+            continue
+        n_ok += 1
+        rf = r["roofline"]
+        rows.append((
+            name,
+            rf["dominant"],
+            f"comp={rf['compute_s']:.2e}s mem={rf['memory_s']:.2e}s "
+            f"coll={rf['collective_s']:.2e}s "
+            f"useful={rf['useful_flops_ratio']:.3f}"
+            if rf.get("useful_flops_ratio") else "n/a"))
+    rows.append((f"roofline[{tag}]/summary", n_ok,
+                 f"skip={n_skip} err={n_err}"))
+    return rows
+
+
+def main(argv=None):
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Paper Figure 8: round-duration heatmaps.
+
+Sweeps constellation geometry x station count per algorithm (timing-only —
+round durations are orbital quantities, independent of gradients) and
+checks the paper's two structural claims:
+  * durations drop steeply from 1 -> 5 stations, then plateau;
+  * adding satellites per cluster beats adding clusters ("trailing effect").
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import emit, run_scenario
+
+ALGS = ("fedavg", "fedavg_sched", "fedavg_intracc", "fedprox", "fedbuff")
+
+
+def run(quick: bool = True, rounds: int = 25):
+    consts = [(1, 2), (2, 5), (5, 10), (10, 10)] if quick else \
+        [(c, s) for c in (1, 2, 5, 10) for s in (1, 2, 5, 10)]
+    stations = (1, 3, 5, 13) if quick else (1, 2, 3, 5, 10, 13)
+    rows = []
+    grid = {}
+    for alg in ALGS:
+        for (cl, sp) in consts:
+            if cl * sp < 2:
+                continue
+            for g in stations:
+                res = run_scenario(alg, cl, sp, g, rounds=rounds)
+                dur_h = res.mean_round_duration_s / 3600
+                grid[(alg, cl, sp, g)] = dur_h
+                rows.append((f"round_dur_h/{alg}/c{cl}s{sp}/g{g}",
+                             round(dur_h, 3), res.n_rounds))
+    # Derived paper claims
+    def chk(name, cond):
+        rows.append((f"claim/{name}", int(bool(cond)), "1=reproduced"))
+
+    a = grid.get(("fedavg", 5, 10, 1)), grid.get(("fedavg", 5, 10, 5)), \
+        grid.get(("fedavg", 5, 10, 13))
+    if all(x is not None for x in a):
+        chk("stations_reduce_duration", a[0] > a[1] > 0)
+        chk("plateau_beyond_5", (a[1] - a[2]) < 0.5 * (a[0] - a[1]))
+    b1 = grid.get(("fedavg_sched", 2, 5, 3))   # 10 sats: 2 clusters x 5
+    b2 = grid.get(("fedavg_sched", 5, 10, 3))  # 50 sats
+    if b1 is not None and b2 is not None:
+        chk("larger_constellations_schedule_better", b2 <= b1)
+
+    # Paper-style ASCII heatmaps (Figure 8 layout).
+    from benchmarks.heatmap import render_grid
+    cls = sorted({k[1] for k in grid})
+    sps = sorted({k[2] for k in grid})
+    for alg in ALGS:
+        for g in sorted({k[3] for k in grid}):
+            vals = {(s, c): grid.get((alg, c, s, g)) for c in cls
+                    for s in sps}
+            if any(v is not None for v in vals.values()):
+                print(render_grid(
+                    vals, sps, cls, fmt="{:.1f}",
+                    title=f"-- round duration [h]: {alg}, {g} stations "
+                          f"(cols=clusters) --"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--rounds", type=int, default=25)
+    args = ap.parse_args(argv)
+    emit(run(quick=not args.full, rounds=args.rounds))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Paper Table 1: the full 768-configuration sweep (timing metrics).
+
+8 algorithm variants x 16 constellations x 6 station networks = 768
+scenarios. Gradient-free (round durations and idle times are orbital
+quantities); the training-accuracy slice of the sweep lives in
+bench_accuracy.py. Emits one row per scenario + aggregate claims.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import (
+    CLUSTERS,
+    SATS_PER_CLUSTER,
+    STATIONS,
+    emit,
+    run_scenario,
+)
+
+ALG_SUITE = ("fedavg", "fedavg_sched", "fedavg_intracc",
+             "fedprox", "fedprox_sched", "fedprox_sched_v2",
+             "fedprox_intracc", "fedbuff")
+
+
+def run(rounds: int = 20, quick: bool = False):
+    algs = ALG_SUITE[:4] if quick else ALG_SUITE
+    clusters = (2, 10) if quick else CLUSTERS
+    sats = (2, 10) if quick else SATS_PER_CLUSTER
+    stations = (1, 13) if quick else STATIONS
+    rows = []
+    n_run = n_skip = 0
+    for alg in algs:
+        for cl in clusters:
+            for sp in sats:
+                for g in stations:
+                    if cl * sp < 2:
+                        n_skip += 1   # single satellite cannot federate
+                        rows.append((f"sweep/{alg}/c{cl}s{sp}/g{g}",
+                                     0, "skip:K<2"))
+                        continue
+                    res = run_scenario(alg, cl, sp, g, rounds=rounds)
+                    rows.append((
+                        f"sweep/{alg}/c{cl}s{sp}/g{g}",
+                        round(res.mean_round_duration_s / 3600, 3),
+                        round(res.mean_idle_per_round_s / 3600, 3)))
+                    n_run += 1
+    rows.append(("sweep/scenarios_run", n_run, f"skipped={n_skip}"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    emit(run(rounds=args.rounds, quick=args.quick))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Shared benchmark infrastructure: cached access windows + sweep runner.
+
+The paper's 768-configuration sweep reuses 16 constellations x 6 nested
+station networks; we compute each constellation's access against the full
+13-station IGS network once (90-day horizon) and derive every subnetwork
+by interval merging (AccessWindows.subset).
+"""
+from __future__ import annotations
+
+import functools
+import os
+import pickle
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import ALGORITHMS                                   # noqa: E402
+from repro.data import synth_femnist                                # noqa: E402
+from repro.orbits import (                                          # noqa: E402
+    WalkerStar,
+    compute_access_windows,
+    station_subnetwork,
+)
+from repro.sim import ConstellationSim, SimConfig                   # noqa: E402
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                         "access_cache")
+HORIZON_S = 90 * 86400.0
+
+# The paper's sweep axes (Table 1).
+CLUSTERS = (1, 2, 5, 10)
+SATS_PER_CLUSTER = (1, 2, 5, 10)
+STATIONS = (1, 2, 3, 5, 10, 13)
+
+
+@functools.lru_cache(maxsize=32)
+def access_full(clusters: int, sats: int, horizon_s: float = HORIZON_S):
+    """13-station access windows for one constellation, disk-cached."""
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR,
+                        f"aw_{clusters}x{sats}_{int(horizon_s)}.pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    c = WalkerStar(clusters, sats)
+    aw = compute_access_windows(c, station_subnetwork(13),
+                                horizon_s=horizon_s)
+    with open(path, "wb") as f:
+        pickle.dump(aw, f)
+    return aw
+
+
+@functools.lru_cache(maxsize=256)
+def access(clusters: int, sats: int, n_stations: int,
+           horizon_s: float = HORIZON_S):
+    return access_full(clusters, sats, horizon_s).subset(n_stations)
+
+
+_DATA_CACHE: dict = {}
+
+
+def data_for(n_sats: int, seed: int = 0):
+    key = (n_sats, seed)
+    if key not in _DATA_CACHE:
+        _DATA_CACHE[key] = synth_femnist(n_sats, seed=seed)
+    return _DATA_CACHE[key]
+
+
+def run_scenario(alg: str, clusters: int, sats: int, n_stations: int,
+                 *, rounds: int = 30, train: bool = False, seed: int = 0,
+                 eval_every: int = 10, horizon_s: float = HORIZON_S):
+    c = WalkerStar(clusters, sats)
+    aw = access(clusters, sats, n_stations, horizon_s)
+    cfg = SimConfig(max_rounds=rounds, horizon_s=horizon_s, train=train,
+                    eval_every=eval_every, seed=seed)
+    sim = ConstellationSim(
+        c, station_subnetwork(n_stations), ALGORITHMS[alg],
+        data=data_for(c.n_sats, seed) if train else None,
+        cfg=cfg, access=aw)
+    return sim.run()
+
+
+def emit(rows, header=("name", "value", "derived")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

@@ -1,0 +1,55 @@
+"""ASCII heatmaps in the paper's Figure 5/8/10 layout.
+
+Rows = satellites per cluster, columns = clusters, one grid per
+(algorithm, station-count). Used by `benchmarks.run --full` summaries and
+available standalone:
+
+  PYTHONPATH=src python -m benchmarks.heatmap results/sweep.csv
+"""
+from __future__ import annotations
+
+SHADES = " .:-=+*#%@"
+
+
+def render_grid(values: dict, rows, cols, fmt="{:.2f}", invert=False,
+                title: str = "") -> str:
+    """values: {(row, col): float}. Higher = darker (invert flips)."""
+    present = [v for v in values.values() if v is not None]
+    if not present:
+        return f"{title}: (no data)"
+    lo, hi = min(present), max(present)
+    span = (hi - lo) or 1.0
+    out = [title]
+    header = "        " + " ".join(f"{c:>7}" for c in cols)
+    out.append(header)
+    for r in rows:
+        cells = []
+        for c in cols:
+            v = values.get((r, c))
+            if v is None:
+                cells.append("      -")
+                continue
+            frac = (v - lo) / span
+            if invert:
+                frac = 1.0 - frac
+            shade = SHADES[int(frac * (len(SHADES) - 1))]
+            cells.append(f"{shade}{fmt.format(v):>6}")
+        out.append(f"s/c={r:<3} " + " ".join(cells))
+    return "\n".join(out)
+
+
+def heatmaps_from_rows(rows_csv, metric_prefix: str):
+    """Parse 'metric/alg/c{X}s{Y}/g{Z},value,...' benchmark rows into
+    {(alg, g): {(Y, X): value}} grids."""
+    grids: dict = {}
+    for name, value, *_ in rows_csv:
+        if not str(name).startswith(metric_prefix + "/"):
+            continue
+        try:
+            _, alg, cs, g = str(name).split("/")
+            c, s = cs[1:].split("s")
+            key = (alg, int(g[1:]))
+            grids.setdefault(key, {})[(int(s), int(c))] = float(value)
+        except (ValueError, IndexError):
+            continue
+    return grids

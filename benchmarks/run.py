@@ -1,0 +1,59 @@
+"""Benchmark entry point: one suite per paper table/figure.
+
+  python -m benchmarks.run [--full] [--only NAME]
+
+Emits ``name,value,derived`` CSV per suite. Default budgets keep the whole
+run CPU-tractable; --full expands to the paper's complete grids (including
+the 768-scenario Table-1 sweep).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    bench_accuracy,
+    bench_idle,
+    bench_kernels,
+    bench_roofline,
+    bench_round_duration,
+    bench_speedup,
+    bench_sweep,
+)
+from benchmarks.common import emit
+
+SUITES = {
+    "kernels": lambda full: bench_kernels.run(),
+    "round_duration": lambda full: bench_round_duration.run(quick=not full),
+    "idle": lambda full: bench_idle.run(quick=not full),
+    "speedup": lambda full: bench_speedup.run(
+        train=True, rounds=150 if full else 100),
+    "accuracy": lambda full: bench_accuracy.run(
+        quick=not full, rounds=150 if full else 100),
+    "sweep768": lambda full: bench_sweep.run(quick=not full),
+    "roofline": lambda full: bench_roofline.run(),
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None, choices=list(SUITES) + [None])
+    args = ap.parse_args(argv)
+
+    names = [args.only] if args.only else list(SUITES)
+    for name in names:
+        print(f"# ==== {name} ====")
+        t0 = time.time()
+        try:
+            rows = SUITES[name](args.full)
+            emit(rows)
+            print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            print(f"# {name}: FAILED {repr(e)[:300]}")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

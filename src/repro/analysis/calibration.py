@@ -1,0 +1,87 @@
+"""Trip-count calibration for scanned-layer HLO costs.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE, so a scanned L-layer
+model underreports FLOPs/bytes/collective-bytes by ~(L-1) layer bodies.
+We recover the exact per-layer body cost by compiling the same step with
+1 and 2 *unrolled* layers per segment and differencing:
+
+    body_seg   = metrics(unrolled, 2 layers) - metrics(unrolled, 1 layer)
+    corrected  = scanned_full + sum_seg (L_seg - 1) * body_seg
+
+(Trip-count-1 loops are unrolled by XLA's WhileLoopSimplifier, so the
+scanned full report contains each segment's body exactly once.)
+Caches are reduced proportionally: decode caches depend only on seq_len,
+not layer count, so the differencing also cancels cache-touch bytes per
+layer correctly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis.collectives import collective_bytes_by_kind
+
+
+@dataclasses.dataclass
+class Metrics:
+    flops: float
+    bytes: float
+    coll: dict[str, float]
+
+    def __sub__(self, o: "Metrics") -> "Metrics":
+        keys = set(self.coll) | set(o.coll)
+        return Metrics(
+            self.flops - o.flops, self.bytes - o.bytes,
+            {k: self.coll.get(k, 0.0) - o.coll.get(k, 0.0) for k in keys})
+
+    def scaled(self, f: float) -> "Metrics":
+        return Metrics(self.flops * f, self.bytes * f,
+                       {k: v * f for k, v in self.coll.items()})
+
+    def __add__(self, o: "Metrics") -> "Metrics":
+        keys = set(self.coll) | set(o.coll)
+        return Metrics(
+            self.flops + o.flops, self.bytes + o.bytes,
+            {k: self.coll.get(k, 0.0) + o.coll.get(k, 0.0) for k in keys})
+
+
+def metrics_from_compiled(compiled) -> Metrics:
+    cost = compiled.cost_analysis() or {}
+    return Metrics(float(cost.get("flops", 0.0)),
+                   float(cost.get("bytes accessed", 0.0)),
+                   collective_bytes_by_kind(compiled.as_text()))
+
+
+def probe_configs(cfg):
+    """(cfg_1layer, cfg_2layer) unrolled probes per segment structure.
+
+    Returns list of (seg_index, cfg1, cfg2, n_layers) — one entry per
+    segment (plus one for the encoder stack if present, marked -1)."""
+    probes = []
+    segs = cfg.resolved_segments
+    for i, seg in enumerate(segs):
+        if seg.n_layers <= 1:
+            continue
+
+        def with_n(n, i=i, seg=seg):
+            new_segs = tuple(
+                dataclasses.replace(s, n_layers=n) if j == i
+                else dataclasses.replace(s, n_layers=min(s.n_layers, 1))
+                for j, s in enumerate(segs))
+            enc = cfg.encoder
+            if enc is not None:
+                enc = dataclasses.replace(enc, n_layers=1)
+            return dataclasses.replace(
+                cfg, segments=new_segs, scan_unroll=True, encoder=enc,
+                n_layers=sum(s.n_layers for s in new_segs))
+
+        probes.append((i, with_n(1), with_n(2), seg.n_layers))
+    if cfg.encoder is not None and cfg.encoder.n_layers > 1:
+        def with_enc(n):
+            new_segs = tuple(dataclasses.replace(s, n_layers=min(s.n_layers, 1))
+                             for s in segs)
+            return dataclasses.replace(
+                cfg, segments=new_segs, scan_unroll=True,
+                encoder=dataclasses.replace(cfg.encoder, n_layers=n),
+                n_layers=sum(s.n_layers for s in new_segs))
+        probes.append((-1, with_enc(1), with_enc(2), cfg.encoder.n_layers))
+    return probes

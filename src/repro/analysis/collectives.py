@@ -1,0 +1,64 @@
+"""Parse collective-op operand bytes out of compiled HLO text.
+
+cost_analysis() does not expose collective traffic, so the dry-run sums
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute in `compiled.as_text()`.
+"""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+# e.g.  %all-reduce.5 = bf16[16,2048]{1,0} all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:[a-z0-9]+\[[0-9,]*\][^ ]*\s*,?\s*)+)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_by_kind(hlo_text: str) -> dict[str, float]:
+    """Total *output* bytes per collective kind across the module.
+
+    `-done` ops are skipped so async pairs are not double-counted.
+    """
+    out: dict[str, float] = {k: 0.0 for k in _KINDS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "-done(" in stripped:
+            continue
+        m = _OP_RE.search(stripped)
+        if not m:
+            continue
+        shapes_str, kind = m.group(1), m.group(2)
+        for dm in _SHAPE_RE.finditer(shapes_str):
+            out[kind] += _shape_bytes(dm.group(1), dm.group(2))
+    return {k: v for k, v in out.items() if v > 0}
+
+
+def count_collectives(hlo_text: str) -> dict[str, int]:
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line.strip())
+        if m:
+            counts[m.group(2)] = counts.get(m.group(2), 0) + 1
+    return counts

@@ -1,0 +1,67 @@
+"""Checkpointing: pytree <-> npz with a JSON-encoded tree structure.
+
+Satellite deployments checkpoint the global model at every aggregation
+(the server can lose contact at any time); the LM launchers checkpoint
+params + optimizer state per interval. Arrays are stored flat, keyed by
+their tree path; bfloat16 round-trips via a uint16 view.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16_TAG = "__bf16__"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            parts.append(str(e.key))
+        elif isinstance(e, jax.tree_util.SequenceKey):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, tree, step: int | None = None) -> None:
+    """Write `tree` to `<path>` (npz + sidecar json)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    keys = []
+    for p, leaf in leaves_with_paths:
+        key = _path_str(p)
+        keys.append(key)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            arrays[key] = arr.view(np.uint16)
+            keys[-1] = key + _BF16_TAG
+        else:
+            arrays[key] = arr
+    np.savez(path + ".npz", **arrays)
+    meta = {"treedef": str(treedef), "keys": keys, "step": step}
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+
+
+def restore_checkpoint(path: str, like):
+    """Restore into the structure of `like` (shapes/dtypes must match)."""
+    data = np.load(path + ".npz")
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for p, leaf in leaves_with_paths:
+        key = _path_str(p)
+        arr = data[key]
+        if np.asarray(leaf).dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16).astype(np.uint16)
+            arr = jax.lax.bitcast_convert_type(jnp.asarray(arr),
+                                               jnp.bfloat16)
+        out.append(jnp.asarray(arr, dtype=np.asarray(leaf).dtype)
+                   if np.asarray(leaf).dtype != jnp.bfloat16 else arr)
+    return jax.tree_util.tree_unflatten(treedef, out)

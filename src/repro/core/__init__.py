@@ -1,0 +1,40 @@
+"""The paper's primary contribution: the space-ification framework.
+
+`repro.core` turns any terrestrial FL strategy into an orbital one by
+composing three pieces (paper section 3):
+
+  1. a `Strategy` (FedAvgSat / FedProxSat / FedBuffSat) — the aggregation
+     math and the client-update regime, as pure JAX;
+  2. a `Selector` — training/eval-stage client selection driven by orbital
+     access windows (base contact-order, FLSchedule, FLIntraCC);
+  3. round-completion semantics — synchronous barrier or buffered async.
+
+The constellation simulator in `repro.sim` executes the composed algorithm
+against real orbital geometry and real gradient updates.
+"""
+from repro.core.strategies.base import Strategy, ClientWorkMode
+from repro.core.strategies.fedavg import FedAvgSat
+from repro.core.strategies.fedprox import FedProxSat
+from repro.core.strategies.fedbuff import FedBuffSat
+from repro.core.selection import (
+    BaseSelector,
+    ScheduleSelector,
+    IntraCCSelector,
+    ClientPlan,
+)
+from repro.core.spaceify import SpaceifiedAlgorithm, spaceify, ALGORITHMS
+
+__all__ = [
+    "Strategy",
+    "ClientWorkMode",
+    "FedAvgSat",
+    "FedProxSat",
+    "FedBuffSat",
+    "BaseSelector",
+    "ScheduleSelector",
+    "IntraCCSelector",
+    "ClientPlan",
+    "SpaceifiedAlgorithm",
+    "spaceify",
+    "ALGORITHMS",
+]

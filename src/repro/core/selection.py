@@ -1,0 +1,170 @@
+"""Orbital client selection (paper section 3 stage 1 + section 4 augmentations).
+
+Three selectors, all producing `ClientPlan`s — a fully-timed itinerary for
+one satellite's participation in one FL round:
+
+  * `BaseSelector`      — Algorithm 1/2 selection: the first `c = min(C,K)`
+                          idle satellites to contact any ground station.
+  * `ScheduleSelector`  — Algorithm 4 (FLSchedule): propagate orbits ahead
+                          and pick the satellites with the smallest
+                          *(initial contact + revisit)* total, i.e. earliest
+                          projected parameter return.
+  * `IntraCCSelector`   — Algorithm 5 (FLIntraCC): a trained satellite may
+                          return its update through any same-cluster peer
+                          that can reach a ground station (the original
+                          satellite keeps priority on ties).
+
+All selectors are pure host-side planning over precomputed `AccessWindows`;
+the tensor math happens later in `repro.sim.engine`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.strategies.base import ClientWorkMode, Strategy
+from repro.core.timing import HardwareModel
+from repro.orbits.access import AccessWindows
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientPlan:
+    """A timed itinerary for satellite `k` in one round."""
+
+    k: int
+    rx_start: float          # global-model download begins (ground contact)
+    rx_end: float            #   ... ends
+    train_start: float
+    train_end: float
+    epochs: int
+    tx_start: float          # parameter return begins
+    tx_end: float            #   ... ends (server receives the update)
+    relay: int = -1          # peer satellite relaying the return (-1: none)
+
+    @property
+    def round_trip(self) -> float:
+        return self.tx_end - self.rx_start
+
+
+def _plan_for(
+    k: int,
+    t: float,
+    aw: AccessWindows,
+    strategy: Strategy,
+    hw: HardwareModel,
+    local_epochs: int,
+    min_epochs: int,
+    use_relay: bool,
+) -> ClientPlan | None:
+    """Build the itinerary for one candidate satellite starting at time t."""
+    w = aw.next_window(k, t)
+    if w is None:
+        return None
+    rx_start = w[0]
+    rx_end = rx_start + hw.tx_time_s
+    if rx_end > w[1]:  # download does not fit: slide into the next pass
+        w2 = aw.next_window(k, w[1] + 1.0)
+        if w2 is None:
+            return None
+        w = w2
+        rx_start, rx_end = w2[0], w2[0] + hw.tx_time_s
+    train_start = rx_end
+    # Training happens *between* passes; parameters return at a subsequent
+    # pass ("Wait until reach nearest station in G, then return w" /
+    # "while no access to ground station do train") — never the download
+    # pass itself.
+    after_pass = w[1] + 1.0
+
+    if strategy.work_mode is ClientWorkMode.FIXED_EPOCHS:
+        train_end = train_start + local_epochs * hw.epoch_time_s
+        epochs = local_epochs
+        earliest_return = max(train_end, after_pass)
+    else:
+        # UNTIL_CONTACT: train until the chosen return pass opens, with a
+        # min-epoch floor (FedProxSchV2) and the hardware duty-cycle cap.
+        earliest_return = max(
+            train_start + max(min_epochs, 1) * hw.epoch_time_s, after_pass)
+        train_end = None  # resolved once the return window is known
+        epochs = 0
+
+    # --- choose the return path -----------------------------------------
+    ret = aw.next_window(k, earliest_return)
+    relay = -1
+    if use_relay:
+        # Any same-cluster peer with line-of-sight along the orbital plane
+        # may relay the update; the original satellite has priority on ties.
+        cl = int(aw.cluster[k])
+        best = aw.cluster_next_window(cl, earliest_return)
+        if best is not None and (ret is None or best[1] < ret[0]):
+            peer, s, e = best
+            if peer != k:
+                relay = peer
+            ret = (s, e)
+    if ret is None:
+        return None
+    tx_start = ret[0]
+    tx_end = tx_start + hw.tx_time_s
+    if strategy.work_mode is ClientWorkMode.UNTIL_CONTACT:
+        # SGD realism: the *number of gradient epochs* is capped by the
+        # onboard duty cycle; but per Algorithms 2-3 the satellite keeps
+        # training right up to the return pass, so its compute span is the
+        # whole inter-pass gap (this is what makes FedProx/FedBuff idle
+        # times collapse in Figures 9b-c).
+        epochs = hw.epochs_between(train_start, tx_start)
+        epochs = max(epochs, min(min_epochs, hw.max_local_epochs)) or 1
+        train_end = tx_start
+    return ClientPlan(
+        k=k, rx_start=rx_start, rx_end=rx_end,
+        train_start=train_start, train_end=float(train_end),
+        epochs=int(epochs), tx_start=tx_start, tx_end=tx_end, relay=relay,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class BaseSelector:
+    """First `c` idle satellites to contact any ground station."""
+
+    use_relay: bool = False
+    schedule: bool = False
+
+    def select(
+        self,
+        aw: AccessWindows,
+        t: float,
+        idle: Sequence[int],
+        c: int,
+        strategy: Strategy,
+        hw: HardwareModel,
+        local_epochs: int = 5,
+        min_epochs: int = 0,
+    ) -> list[ClientPlan]:
+        plans = []
+        for k in idle:
+            p = _plan_for(int(k), t, aw, strategy, hw, local_epochs,
+                          min_epochs, self.use_relay)
+            if p is not None:
+                plans.append(p)
+        # Base rule: order by *initial contact* (first to reach a station).
+        # Schedule rule: order by projected parameter-return time.
+        key = (lambda p: (p.tx_end, p.rx_start)) if self.schedule \
+            else (lambda p: (p.rx_start, p.tx_end))
+        plans.sort(key=key)
+        return plans[: min(c, len(plans))]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleSelector(BaseSelector):
+    """FLSchedule (Algorithm 4): pick fastest-returning satellites."""
+
+    use_relay: bool = False
+    schedule: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class IntraCCSelector(BaseSelector):
+    """FLIntraCC (Algorithm 5): cluster peers may relay parameter returns."""
+
+    use_relay: bool = True
+    schedule: bool = False

@@ -1,0 +1,76 @@
+"""spaceify(): compose a terrestrial strategy with orbital selection.
+
+This is the paper's headline API. A `SpaceifiedAlgorithm` bundles
+  strategy  (aggregation math + client regime)
+  selector  (training-stage AND evaluation-stage client selection)
+  knobs     (local epochs E, min-epoch floor, buffer size D)
+and is what `repro.sim.engine.ConstellationSim` executes.
+
+`ALGORITHMS` registers the paper's full Table-1 suite (8 variants).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.selection import BaseSelector, IntraCCSelector, ScheduleSelector
+from repro.core.strategies.base import Strategy
+from repro.core.strategies.fedavg import FedAvgSat
+from repro.core.strategies.fedbuff import FedBuffSat
+from repro.core.strategies.fedprox import FedProxSat
+
+
+@dataclasses.dataclass(frozen=True)
+class SpaceifiedAlgorithm:
+    name: str
+    strategy: Strategy
+    selector: BaseSelector
+    local_epochs: int = 5      # E (FIXED_EPOCHS regime)
+    min_epochs: int = 0        # SchedV2 floor (UNTIL_CONTACT regime)
+    buffer_frac: float = 1.0   # FedBuff: D = max(1, round(buffer_frac * c))
+
+    @property
+    def synchronous(self) -> bool:
+        return self.strategy.synchronous
+
+
+def spaceify(strategy: Strategy, *, schedule: bool = False,
+             intracc: bool = False, min_epochs: int = 0,
+             local_epochs: int = 5, name: str | None = None,
+             buffer_frac: float = 1.0) -> SpaceifiedAlgorithm:
+    """Adapt any terrestrial `Strategy` for orbital deployment."""
+    if intracc:
+        selector = IntraCCSelector(schedule=schedule)
+    elif schedule:
+        selector = ScheduleSelector()
+    else:
+        selector = BaseSelector()
+    suffix = ("_sched" if schedule else "") + ("_intracc" if intracc else "")
+    if min_epochs:
+        suffix += "_v2"
+    return SpaceifiedAlgorithm(
+        name=name or strategy.name + suffix,
+        strategy=strategy,
+        selector=selector,
+        local_epochs=local_epochs,
+        min_epochs=min_epochs,
+        buffer_frac=buffer_frac,
+    )
+
+
+def _suite() -> dict[str, SpaceifiedAlgorithm]:
+    """The paper's Table-1 algorithm suite."""
+    fedavg, fedprox, fedbuff = FedAvgSat(), FedProxSat(), FedBuffSat()
+    algs = [
+        spaceify(fedavg),
+        spaceify(fedavg, schedule=True),
+        spaceify(fedavg, intracc=True),
+        spaceify(fedprox),
+        spaceify(fedprox, schedule=True),
+        spaceify(fedprox, schedule=True, min_epochs=5),   # FedProxSchedV2
+        spaceify(fedprox, intracc=True),
+        spaceify(fedbuff),
+    ]
+    return {a.name: a for a in algs}
+
+
+ALGORITHMS: dict[str, SpaceifiedAlgorithm] = _suite()

@@ -1,0 +1,6 @@
+from repro.core.strategies.base import Strategy, ClientWorkMode
+from repro.core.strategies.fedavg import FedAvgSat
+from repro.core.strategies.fedprox import FedProxSat
+from repro.core.strategies.fedbuff import FedBuffSat
+
+__all__ = ["Strategy", "ClientWorkMode", "FedAvgSat", "FedProxSat", "FedBuffSat"]

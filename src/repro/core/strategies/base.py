@@ -1,0 +1,63 @@
+"""Strategy protocol shared by all space-ified FL algorithms.
+
+A `Strategy` owns two things:
+  * the *client-update regime* — whether a satellite trains for a fixed
+    number of epochs (FedAvg) or keeps training until its next ground
+    contact (FedProx / FedBuff), and whether a proximal term anchors the
+    local model to the round's global model;
+  * the *server aggregation rule* — how returned parameters are folded
+    into the global model (sync weighted average, or buffered async with
+    staleness discounting).
+
+Everything tensor-shaped is a JAX pytree; aggregation is pure JAX so it can
+be jitted, vmapped, sharded over a mesh axis, or lowered in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any
+
+import jax
+
+from repro.core.aggregation import weighted_average
+
+Pytree = Any
+
+
+class ClientWorkMode(enum.Enum):
+    FIXED_EPOCHS = "fixed_epochs"     # exactly E local epochs, then wait
+    UNTIL_CONTACT = "until_contact"   # train until next ground-station pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """Base class; concrete algorithms override `aggregate` if needed."""
+
+    name: str = "base"
+    work_mode: ClientWorkMode = ClientWorkMode.FIXED_EPOCHS
+    synchronous: bool = True
+    # Proximal coefficient (FedProx / FedBuff client regularisation).
+    prox_mu: float = 0.0
+    # Async-only knobs (FedBuff).
+    max_staleness: int = 0
+    server_lr: float = 1.0
+
+    # --- server side -----------------------------------------------------
+    def aggregate(
+        self,
+        global_params: Pytree,
+        client_params: Pytree,   # stacked: every leaf has leading axis K
+        weights: jax.Array,      # (K,) n_k sample counts (already masked)
+        staleness: jax.Array,    # (K,) integer rounds behind, sync algs: 0
+    ) -> Pytree:
+        """Fold returned client parameters into the global model (Eq. 1)."""
+        del global_params, staleness
+        return weighted_average(client_params, weights)
+
+    # --- bookkeeping ------------------------------------------------------
+    def staleness_ok(self, staleness: int) -> bool:
+        """Bounded-staleness admission check (async algorithms)."""
+        if self.synchronous:
+            return staleness == 0
+        return staleness <= self.max_staleness

@@ -1,0 +1,54 @@
+"""Satellite hardware/cost model (paper section 5 numbers as defaults).
+
+The paper assumes a SpaceCloud iX5-106 class onboard computer (40 GFLOP/s),
+a 47k-parameter (186 KB) model, 98 MFLOP per local epoch, and Planet-Dove
+class telemetry at 580 Mbps. All knobs are configurable so the same
+simulator prices the assigned LM architectures (repro/configs) — there the
+model bytes / FLOPs are derived from the architecture config.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.orbits import constants as C
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    gflops: float = C.CLIENT_GFLOPS          # onboard compute
+    epoch_mflops: float = C.EPOCH_MFLOPS     # FLOPs per local epoch
+    link_mbps: float = C.LINK_MBPS           # telemetry rate
+    model_bytes: int = C.MODEL_BYTES         # parameters on the wire
+    # Energy/duty-cycle cap on continuous training (UNTIL_CONTACT regime):
+    # without it the 2.45 ms epochs of the paper's cost model would allow
+    # millions of epochs between passes. The paper's Flower runs bound local
+    # work the same way (variable but finite epochs).
+    max_local_epochs: int = 100
+
+    @property
+    def epoch_time_s(self) -> float:
+        return (self.epoch_mflops * 1e6) / (self.gflops * 1e9)
+
+    @property
+    def tx_time_s(self) -> float:
+        """One model transfer (either direction) over the telemetry link."""
+        return (self.model_bytes * 8) / (self.link_mbps * 1e6)
+
+    def epochs_between(self, t0: float, t1: float, *, cap: bool = True) -> int:
+        """How many whole local epochs fit in [t0, t1)."""
+        n = int(max(0.0, t1 - t0) / self.epoch_time_s)
+        return min(n, self.max_local_epochs) if cap else n
+
+
+def lm_hardware_model(n_params: int, flops_per_step: float,
+                      steps_per_epoch: int = 1,
+                      gflops: float = 275e3,       # one v5e pod-slice client
+                      link_mbps: float = 580.0,
+                      bytes_per_param: int = 2) -> HardwareModel:
+    """Price an assigned LM architecture as a constellation client."""
+    return HardwareModel(
+        gflops=gflops,
+        epoch_mflops=flops_per_step * steps_per_epoch / 1e6,
+        link_mbps=link_mbps,
+        model_bytes=n_params * bytes_per_param,
+    )

@@ -1,0 +1,4 @@
+from repro.data.femnist import FederatedDataset, synth_femnist
+from repro.data.tokens import synthetic_token_batch
+
+__all__ = ["FederatedDataset", "synth_femnist", "synthetic_token_batch"]

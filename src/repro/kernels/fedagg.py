@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: federated weighted aggregation (paper Eq. 1).
+
+    out[p] = sum_k w[k] * x[k, p]
+
+The hot loop of every FL round: a K-way weighted reduction over stacked
+client models (K <= ~100 satellites, P = model parameters). Memory-bound
+VPU work — each grid step streams a (K, BLOCK_P) slab of client parameters
+through VMEM and reduces over K. BLOCK_P is a multiple of (8, 128) lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_P = 8 * 128 * 4          # 4096 params per grid step per client row
+
+
+def _fedagg_kernel(w_ref, x_ref, o_ref):
+    # x_ref: (K, BLOCK_P) VMEM slab; w_ref: (K, 1) VMEM; o_ref: (1, BLOCK_P).
+    x = x_ref[...]
+    w = w_ref[...].astype(jnp.float32)             # (K, 1)
+    acc = jnp.sum(x.astype(jnp.float32) * w, axis=0, keepdims=True)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_p"))
+def fedagg(x: jax.Array, w: jax.Array, *, interpret: bool = False,
+           block_p: int = BLOCK_P) -> jax.Array:
+    """x: (K, P) stacked flat client params; w: (K,) weights -> (P,)."""
+    K, P = x.shape
+    pad = (-P) % block_p
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    n = (P + pad) // block_p
+    out = pl.pallas_call(
+        _fedagg_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K, block_p), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_p), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, P + pad), x.dtype),
+        interpret=interpret,
+    )(w[:, None], x)
+    return out[0, :P]

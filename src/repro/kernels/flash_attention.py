@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: flash attention (causal / sliding-window / GQA).
+
+Online-softmax block attention in the canonical TPU formulation:
+grid (B, H, nQ, nK) with the KV dimension innermost and "arbitrary"
+semantics; VMEM scratch (m, l, acc) persists across the KV sweep and the
+output block is finalized on the last KV step. Blocks are MXU-aligned
+(q_block x head_dim and k_block x head_dim with head_dim a multiple of
+128 preferred).
+
+Sliding-window + causal masking happens per block; fully-masked blocks
+are skipped via @pl.when so a w=4096 window over a 32k sequence only pays
+for the diagonal band.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  bq: int, bk: int, nk: int, softcap: float | None):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # Block-level reachability: skip blocks fully outside the causal band
+    # / sliding window.
+    reachable = True
+    if causal:
+        reachable = k_start <= q_start + bq - 1
+    if window is not None:
+        reachable = jnp.logical_and(
+            reachable, k_start + bk - 1 > q_start - window)
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                          # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "bq", "bk",
+                              "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    softcap: float | None = None, bq: int = DEFAULT_BQ,
+                    bk: int = DEFAULT_BK,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, KV, S, D) with H % KV == 0 -> (B, H, S, D).
+
+    Positions are 0..S-1 (prefill layout).
+    """
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    rep = H // KV
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0, "pad seq to block multiples"
+    nq, nk = S // bq, S // bk
+    scale = D ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, nk=nk, softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((bq, D), jnp.float32),    # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fedagg_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (K, P), w: (K,) -> (P,)."""
+    return jnp.einsum("k,kp->p", w.astype(jnp.float32),
+                      x.astype(jnp.float32)).astype(x.dtype)
+
+
+def prox_sgd_ref(w, g, w0, lr, mu):
+    w32, g32, w032 = (z.astype(jnp.float32) for z in (w, g, w0))
+    return (w32 - lr * (g32 + mu * (w32 - w032))).astype(w.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=None):
+    """q: (B,H,S,D), k/v: (B,KV,S,D) -> (B,H,S,D). Naive softmax."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    rep = H // KV
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, logw, s0):
+    """Strict-past decayed scan oracle (lax.scan over T)."""
+    def step(s, xs):
+        rt, kt, vt, wt = xs
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s)
+        s = jnp.exp(wt)[..., :, None] * s + kt[..., :, None] * vt[..., None, :]
+        return s, o
+    xs = tuple(jnp.moveaxis(z.astype(jnp.float32), 2, 0)
+               for z in (r, k, v, logw))
+    s_final, o = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(o, 0, 2).astype(r.dtype), s_final.astype(r.dtype)

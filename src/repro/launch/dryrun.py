@@ -1,0 +1,284 @@
+"""Multi-pod dry-run: lower + compile every (arch x input shape) on the
+production meshes, prove the sharding is coherent, and extract the
+roofline terms (FLOPs / bytes / collective bytes) from the compiled
+artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+      --out results/dryrun.json
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+
+import argparse
+import dataclasses
+import functools
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.calibration import metrics_from_compiled, probe_configs
+from repro.analysis.roofline import model_flops, roofline_terms
+from repro.configs import get_config, lm_arch_ids
+from repro.configs.shapes import INPUT_SHAPES, input_specs, longctx_variant
+from repro.launch.mesh import make_production_mesh
+from repro.models.lm.transformer import init_params, prefill
+from repro.optim.adam import adam_init
+from repro.sharding.ctx import activation_sharding, expert_parallel, model_axis
+from repro.sharding.specs import (
+    batch_pspec,
+    cache_pspecs,
+    param_pspecs,
+    small_model_mode,
+)
+from repro.train.step import make_prefill_step, make_serve_step, make_train_step
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_shardings(mesh, batch_struct, B):
+    dp = batch_pspec(mesh, B)
+
+    def spec(x):
+        return NamedSharding(mesh, P(dp, *([None] * (x.ndim - 1))))
+
+    return jax.tree.map(spec, batch_struct)
+
+
+def _compile(cfg, shape, mesh, *, remat: bool = True, donate: bool = True,
+             force_small: bool | None = None, ep: bool = False):
+    """Lower + compile one step for (cfg, shape) on mesh.
+
+    force_small pins the sharding regime — calibration probes (1-2 layer
+    variants) must compile under the FULL model's regime or their body
+    costs are measured under the wrong parallelism."""
+    rng = jax.random.PRNGKey(0)
+    params_s = jax.eval_shape(functools.partial(init_params, cfg), rng)
+    small = small_model_mode(params_s, mesh) if force_small is None \
+        else force_small
+    if small and shape.kind == "train":
+        # Pure-DP regime: weights replicated inside the step, batch over
+        # EVERY mesh axis (data x model) — see train.step.make_train_step.
+        dp = tuple(mesh.axis_names)
+        if shape.global_batch % mesh.devices.size:
+            dp = batch_pspec(mesh, shape.global_batch)
+    else:
+        dp = batch_pspec(mesh, shape.global_batch)
+    ma = model_axis("model" if shape.kind == "decode" else None)
+    use_ep = (ep and cfg.moe is not None and shape.kind != "decode"
+              and isinstance(dp, tuple)
+              and cfg.moe.n_experts % mesh.shape["data"] == 0)
+    epctx = expert_parallel(dp if use_ep else None,
+                            "data" if use_ep else None,
+                            mesh.shape["data"] if use_ep else 0, mesh)
+    with activation_sharding(dp if isinstance(dp, tuple) else None), \
+            ma, epctx, mesh:
+        return _compile_inner(cfg, shape, mesh, remat=remat, donate=donate,
+                              dp=dp, small=small)
+
+
+def _compile_inner(cfg, shape, mesh, *, remat: bool, donate: bool,
+                   dp=None, small: bool = False):
+    rng = jax.random.PRNGKey(0)
+    params_s = jax.eval_shape(functools.partial(init_params, cfg), rng)
+    mode = "serve" if shape.kind == "decode" else "train"
+    params_ns = _ns(mesh, param_pspecs(params_s, mesh, mode=mode,
+                                       allow_tp_only=small))
+    batch_s = input_specs(cfg, shape)
+    batch_ns = jax.tree.map(
+        lambda x: NamedSharding(mesh, P(dp, *([None] * (x.ndim - 1)))),
+        batch_s)
+
+    if shape.kind == "train":
+        opt_s = jax.eval_shape(adam_init, params_s)
+        opt_ns = {"mu": params_ns, "nu": params_ns,
+                  "step": NamedSharding(mesh, P())}
+        step = make_train_step(cfg, remat=remat, replicate_weights=small)
+        jitted = jax.jit(
+            step,
+            in_shardings=(params_ns, opt_ns, batch_ns),
+            out_shardings=(params_ns, opt_ns, None),
+            donate_argnums=(0, 1) if donate else ())
+        with mesh:
+            return jitted.lower(params_s, opt_s, batch_s).compile()
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, max_seq=shape.seq_len)
+        jitted = jax.jit(step, in_shardings=(params_ns, batch_ns))
+        with mesh:
+            return jitted.lower(params_s, batch_s).compile()
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+    tok1 = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    enc_s = None
+    if cfg.encoder is not None:
+        enc_s = jax.ShapeDtypeStruct(
+            (B, cfg.encoder.n_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+    _, cache_s = jax.eval_shape(
+        lambda p: prefill(cfg, p, jnp.zeros((B, 1), jnp.int32), S,
+                          enc_embeds=enc_s and jnp.zeros(enc_s.shape,
+                                                         enc_s.dtype)),
+        params_s)
+    cache_ns = _ns(mesh, cache_pspecs(cache_s, mesh, B))
+    tok_ns = NamedSharding(mesh, P(batch_pspec(mesh, B), None))
+    step = make_serve_step(cfg)
+    jitted = jax.jit(
+        step, in_shardings=(params_ns, tok_ns, cache_ns),
+        donate_argnums=(2,) if donate else ())
+    with mesh:
+        return jitted.lower(params_s, tok1, cache_s).compile()
+
+
+def lower_pair(arch: str, shape_name: str, mesh, *, remat: bool = True,
+               donate: bool = True, calibrate: bool = True,
+               ep: bool = False):
+    """Lower + compile one (arch, shape, mesh). Returns a result dict.
+
+    With calibrate=True the scanned-layer cost underreport is corrected by
+    differencing 1- vs 2-layer unrolled probe compiles per segment
+    (analysis/calibration.py).
+    """
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    note = ""
+    if shape_name == "long_500k":
+        cfg, note = longctx_variant(cfg)
+        if cfg is None:
+            return {"arch": arch, "shape": shape_name, "status": "skipped",
+                    "note": note}
+
+    t0 = time.time()
+    compiled = _compile(cfg, shape, mesh, remat=remat, donate=donate, ep=ep)
+    compile_s = time.time() - t0
+    raw = metrics_from_compiled(compiled)
+    mem = compiled.memory_analysis()
+
+    corrected = raw
+    calibration_note = "raw (uncalibrated)"
+    if calibrate:
+        try:
+            # Probes inherit the FULL model's sharding regime.
+            full_params = jax.eval_shape(
+                functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+            full_small = small_model_mode(full_params, mesh)
+            for _, cfg1, cfg2, n_layers in probe_configs(cfg):
+                m1 = metrics_from_compiled(
+                    _compile(cfg1, shape, mesh, remat=remat, donate=donate,
+                             force_small=full_small, ep=ep))
+                m2 = metrics_from_compiled(
+                    _compile(cfg2, shape, mesh, remat=remat, donate=donate,
+                             force_small=full_small, ep=ep))
+                body = m2 - m1
+                corrected = corrected + body.scaled(n_layers - 1)
+            calibration_note = "probe-calibrated (scan trip counts)"
+        except Exception as e:  # noqa: BLE001
+            calibration_note = f"calibration failed: {repr(e)[:200]}"
+
+    n_chips = mesh.devices.size
+    result = {
+        "arch": arch, "shape": shape_name, "status": "ok", "note": note,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": int(n_chips),
+        "compile_s": round(compile_s, 1),
+        "memory": _mem_dict(mem),
+        # Per-device numbers (cost_analysis reports the SPMD per-device
+        # program; collective bytes parsed from the per-device HLO).
+        "cost_flops": corrected.flops,
+        "cost_bytes": corrected.bytes,
+        "collective_bytes": corrected.coll,
+        "raw_cost_flops": raw.flops,
+        "calibration": calibration_note,
+        "model_flops": model_flops(cfg, shape),
+    }
+    result["roofline"] = roofline_terms(result)
+    return result
+
+
+def _mem_dict(mem):
+    if mem is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="skip probe compiles (multi-pod proof pass)")
+    ap.add_argument("--ep", action="store_true",
+                    help="expert-parallel token all-to-all MoE (shard_map)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(), make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    pairs = []
+    archs = lm_arch_ids() if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    for a in archs:
+        for s in shapes:
+            pairs.append((a, s))
+
+    results = []
+    for mesh in meshes:
+        for arch, shape in pairs:
+            tag = f"[{arch} x {shape} @ {mesh.devices.shape}]"
+            try:
+                r = lower_pair(arch, shape, mesh, remat=not args.no_remat,
+                               calibrate=not args.no_calibrate, ep=args.ep)
+                results.append(r)
+                if r["status"] == "ok":
+                    rf = r["roofline"]
+                    print(f"{tag} OK compile={r['compile_s']}s "
+                          f"flops={r['cost_flops']:.3e} "
+                          f"bytes={r['cost_bytes']:.3e} "
+                          f"coll={sum(r['collective_bytes'].values()):.3e}B "
+                          f"bound={rf['dominant']}")
+                else:
+                    print(f"{tag} SKIP: {r['note']}")
+            except Exception as e:  # noqa: BLE001 — report and continue
+                results.append({"arch": arch, "shape": shape,
+                                "status": "error", "error": repr(e)[:500]})
+                print(f"{tag} ERROR: {repr(e)[:300]}")
+            sys.stdout.flush()
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    n_err = sum(1 for r in results if r["status"] == "error")
+    print(f"done: {len(results)} pairs, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

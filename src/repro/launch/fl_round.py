@@ -1,0 +1,70 @@
+"""FL round over the production mesh — the paper's technique, mesh-native.
+
+The satellite mapping of DESIGN.md section 3: the "pod" axis carries one
+orbital cluster per pod; a round's aggregation (Eq. 1) is a *masked*
+weighted psum across that axis — satellites with no ground contact this
+round contribute zero weight, which is exactly FedBuff's buffer semantics
+expressed as a dense ICI collective instead of point-to-point sends.
+
+`make_fl_round_step` shard_maps the pod axis manually (each pod = one FL
+client cluster) while the data/model axes stay automatic (GSPMD shards the
+inner train step as usual).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.aggregation import participation_masked_psum
+from repro.models.lm.config import ModelConfig
+from repro.train.step import lm_loss
+
+
+def make_fl_round_step(cfg: ModelConfig, mesh, lr: float = 1e-3,
+                       local_steps: int = 1, prox_mu: float = 0.0):
+    """One federated round: every pod runs `local_steps` of (proximal) SGD
+    on its own shard of the batch, then the global model updates with the
+    participation-masked weighted average of the pod deltas.
+
+    Returns fn(params, batch, weights) where `weights` is (n_pods,) —
+    n_k for participating clusters, 0 for out-of-contact ones.
+    """
+    axis = "pod" if "pod" in mesh.axis_names else "data"
+
+    grad_fn = jax.grad(lambda p, b: lm_loss(cfg, p, b)[0])
+
+    def pod_round(params, batch, weight):
+        # Inside shard_map over `axis`: batch is this pod's shard, weight
+        # is this pod's scalar participation weight.
+        w = weight[0]
+        local = params
+
+        def body(i, local):
+            g = grad_fn(local, batch)
+            return jax.tree.map(
+                lambda p, gi, p0: p - lr * (gi + prox_mu * (p - p0)),
+                local, g, params)
+
+        local = jax.lax.fori_loop(0, local_steps, body, local)
+        delta = jax.tree.map(lambda a, b: a - b, local, params)
+        agg = participation_masked_psum(delta, w, axis)
+        return jax.tree.map(lambda p, d: p + d, params, agg)
+
+    n_batch_dims = {"tokens": 2, "prefix_embeds": 3, "enc_embeds": 3}
+    batch_specs = {
+        k: P(axis, *([None] * (n - 1))) for k, n in n_batch_dims.items()}
+
+    def round_step(params, batch, weights):
+        specs = {k: batch_specs[k] for k in batch}
+        return jax.shard_map(
+            pod_round,
+            mesh=mesh,
+            in_specs=(P(), specs, P(axis)),
+            out_specs=P(),
+            axis_names={axis},
+        )(params, batch, weights)
+
+    return round_step

@@ -1,0 +1,31 @@
+"""Production meshes (DESIGN.md section 8).
+
+Single pod: (data=16, model=16) = 256 chips.
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips — the "pod" axis carries
+the FL/data-parallel all-reduce (pods ~ orbital clusters in the satellite
+mapping).
+
+`make_production_mesh` is a function (never a module-level constant) so
+importing this module touches no jax device state. The dry-run entry point
+(`dryrun.py`) sets XLA_FLAGS host-device-count=512 *before* any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke runs (same axis names, size 1)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline (per chip).
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link

@@ -1,0 +1,72 @@
+"""Training launcher: run an assigned architecture end-to-end.
+
+Reduced configs run for real on the host; full configs require the TPU
+meshes (this launcher shares all code paths with the dry-run, so a real
+deployment only changes `--mesh`).
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma-2b \
+      --steps 50 --batch 4 --seq 128 --ckpt results/ckpt/gemma
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.io import restore_checkpoint, save_checkpoint
+from repro.configs import get_config, lm_arch_ids
+from repro.data.tokens import synthetic_token_batch
+from repro.models.lm import count_params, init_params
+from repro.optim.adam import adam_init
+from repro.train.step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b", choices=lm_arch_ids())
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the production config (TPU meshes only)")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    print(f"{cfg.name}: {count_params(params)/1e6:.2f}M params")
+    opt = adam_init(params)
+    step = jax.jit(make_train_step(cfg, lr=args.lr, remat=False))
+
+    import numpy as np
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for i in range(args.steps):
+        toks = synthetic_token_batch(args.batch, args.seq, cfg.vocab_size,
+                                     seed=int(rng.integers(1 << 30)))
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.n_prefix_tokens:
+            batch["prefix_embeds"] = jnp.zeros(
+                (args.batch, cfg.n_prefix_tokens, cfg.d_model), cfg.dtype)
+        if cfg.encoder is not None:
+            batch["enc_embeds"] = jnp.zeros(
+                (args.batch, cfg.encoder.n_frames, cfg.d_model), cfg.dtype)
+        params, opt, metrics = step(params, opt, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+        if args.ckpt and (i + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt, params, step=i + 1)
+            print(f"  checkpointed -> {args.ckpt}.npz")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, step=args.steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.femnist_cnn import femnist_cnn_init, femnist_cnn_apply, count_params
+
+__all__ = ["femnist_cnn_init", "femnist_cnn_apply", "count_params"]

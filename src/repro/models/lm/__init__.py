@@ -1,0 +1,21 @@
+from repro.models.lm.config import (
+    EncoderConfig,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    Segment,
+    SSMConfig,
+)
+from repro.models.lm.transformer import (
+    count_params,
+    decode_step,
+    forward_train,
+    init_params,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "Segment",
+    "EncoderConfig", "init_params", "forward_train", "prefill",
+    "decode_step", "count_params",
+]

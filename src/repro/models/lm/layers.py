@@ -1,0 +1,76 @@
+"""Shared building blocks: norms, RoPE, gated MLPs, initializers.
+
+Parameters are plain nested dicts. Every init_* takes an rng and returns a
+dict whose leaves already carry the segment's stacked layer axis when
+created through `transformer.init_segment` (via vmap over layer rngs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(rng, shape, scale: float | None = None):
+    """Truncated-normal fan-in init (MaxText-style)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return std * jax.random.truncated_normal(
+        rng, -2.0, 2.0, shape, jnp.float32)
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * (1.0 + gamma)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (D/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- #
+# Gated MLPs
+# ----------------------------------------------------------------------- #
+def init_mlp(rng, d_model: int, d_ff: int, gated: bool) -> dict:
+    ks = jax.random.split(rng, 3)
+    p = {"w1": dense_init(ks[0], (d_model, d_ff)),
+         "w2": dense_init(ks[1], (d_ff, d_model))}
+    if gated:
+        p["w3"] = dense_init(ks[2], (d_model, d_ff))
+    return p
+
+
+def apply_mlp(p: dict, x: jax.Array, kind: str) -> jax.Array:
+    h = x @ p["w1"]
+    if kind == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["w3"])
+    elif kind == "geglu":
+        h = jax.nn.gelu(h, approximate=True) * (x @ p["w3"])
+    elif kind == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    else:
+        raise ValueError(kind)
+    return h @ p["w2"]
+
+
+def causal_mask(q_pos: jax.Array, k_pos: jax.Array,
+                window: int | None = None) -> jax.Array:
+    """(..., Q, K) boolean mask: True = attend. Supports sliding window."""
+    m = q_pos[..., :, None] >= k_pos[..., None, :]
+    if window is not None:
+        m &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return m

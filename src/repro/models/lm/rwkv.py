@@ -1,0 +1,150 @@
+"""RWKV6 "Finch" block: data-dependent-decay time mix + channel mix.
+
+Faithful to arXiv:2404.05892: token-shift with data-dependent lerp (ddlerp
+via a small LoRA), per-channel decay w_t = exp(-exp(w0 + lora(x))), bonus
+u, per-head GroupNorm on the WKV output, and the squared-ReLU channel mix.
+The recurrence runs through the shared chunked scan core
+(`scan_core.chunked_decay_scan`) in training/prefill and a single-step
+update in decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.layers import dense_init
+from repro.models.lm.scan_core import chunked_decay_scan, decay_scan_step
+
+LORA_TM = 32     # ddlerp LoRA rank
+LORA_DECAY = 64  # decay LoRA rank
+
+
+def init_rwkv_time_mix(rng, d_model: int, head_dim: int) -> dict:
+    ks = jax.random.split(rng, 12)
+    H = d_model // head_dim
+    return {
+        # ddlerp: 5 interpolation targets (r, k, v, w, g)
+        "mu": 0.5 * jnp.ones((5, d_model)),
+        "tm_w1": dense_init(ks[0], (d_model, 5 * LORA_TM), scale=0.01),
+        "tm_w2": dense_init(ks[1], (5, LORA_TM, d_model), scale=0.01),
+        # decay
+        "w0": -6.0 + 5.0 * jnp.linspace(0.0, 1.0, d_model) ** 1.5,
+        "td_w1": dense_init(ks[2], (d_model, LORA_DECAY), scale=0.01),
+        "td_w2": dense_init(ks[3], (LORA_DECAY, d_model), scale=0.01),
+        "u": 0.1 * jnp.ones((H, head_dim)),
+        "wr": dense_init(ks[4], (d_model, d_model)),
+        "wk": dense_init(ks[5], (d_model, d_model)),
+        "wv": dense_init(ks[6], (d_model, d_model)),
+        "wg": dense_init(ks[7], (d_model, d_model)),
+        "wo": dense_init(ks[8], (d_model, d_model)),
+        "ln_x_g": jnp.ones((d_model,)),
+        "ln_x_b": jnp.zeros((d_model,)),
+    }
+
+
+def init_rwkv_channel_mix(rng, d_model: int, d_ff: int) -> dict:
+    ks = jax.random.split(rng, 3)
+    return {
+        "mu_k": 0.5 * jnp.ones((d_model,)),
+        "mu_r": 0.5 * jnp.ones((d_model,)),
+        "wk": dense_init(ks[0], (d_model, d_ff)),
+        "wv": dense_init(ks[1], (d_ff, d_model)),
+        "wr": dense_init(ks[2], (d_model, d_model)),
+    }
+
+
+def _group_norm(x: jax.Array, g: jax.Array, b: jax.Array, n_groups: int,
+                eps: float = 64e-5) -> jax.Array:
+    """Per-head GroupNorm over the channel dim. x: (..., d)."""
+    shp = x.shape
+    xg = x.reshape(shp[:-1] + (n_groups, shp[-1] // n_groups))
+    mean = xg.mean(-1, keepdims=True)
+    var = xg.var(-1, keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(shp) * g + b
+
+
+def _ddlerp(p: dict, x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    """Data-dependent token-shift: 5 mixed variants of (x, x_prev).
+    Returns (5, B, T, d)."""
+    dx = x_prev - x
+    # First-stage mix for the LoRA input (RWKV6 uses mu_x; reuse mu[0]).
+    xx = x + dx * p["mu"][0]
+    lora = jnp.tanh(xx @ p["tm_w1"])                     # (B,T,5*r)
+    lora = lora.reshape(*lora.shape[:-1], 5, LORA_TM)
+    adj = jnp.einsum("btfr,frd->fbtd", lora, p["tm_w2"])  # (5,B,T,d)
+    return x[None] + dx[None] * (p["mu"][:, None, None, :] + adj)
+
+
+def rwkv_time_mix(p: dict, x: jax.Array, head_dim: int,
+                  x_prev: jax.Array | None = None,
+                  state: jax.Array | None = None,
+                  chunk: int = 64):
+    """x: (B,T,d). Returns (out, (last_x, final_state))."""
+    B, T, d = x.shape
+    H = d // head_dim
+    if x_prev is None:
+        x_prev_seq = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        x_prev_seq = jnp.concatenate([x_prev[:, None, :], x[:, :-1]], 1)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev_seq)
+    r = (xr @ p["wr"]).reshape(B, T, H, head_dim)
+    k = (xk @ p["wk"]).reshape(B, T, H, head_dim)
+    v = (xv @ p["wv"]).reshape(B, T, H, head_dim)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = -jnp.exp(
+        (p["w0"] + jnp.tanh(xw @ p["td_w1"]) @ p["td_w2"]).astype(jnp.float32)
+    ).reshape(B, T, H, head_dim)
+    logw = jnp.clip(logw, -40.0, -1e-4)
+
+    bhtk = lambda z: z.transpose(0, 2, 1, 3)             # (B,H,T,K)
+    if state is None:
+        state = jnp.zeros((B, H, head_dim, head_dim), x.dtype)
+    o, s_final = chunked_decay_scan(
+        bhtk(r).astype(jnp.float32), bhtk(k).astype(jnp.float32),
+        bhtk(v).astype(jnp.float32), bhtk(logw),
+        state.astype(jnp.float32), chunk=chunk)
+    # Diagonal bonus term: r.(u (.) k_t) v_t
+    diag = jnp.einsum("bthk,hk,bthk->bth", r.astype(jnp.float32),
+                      p["u"], k.astype(jnp.float32))
+    o = o.transpose(0, 2, 1, 3) + diag[..., None] * v.astype(jnp.float32)
+    o = o.reshape(B, T, d).astype(x.dtype)
+    o = _group_norm(o, p["ln_x_g"], p["ln_x_b"], H)
+    return (o * g) @ p["wo"], (x[:, -1, :], s_final.astype(x.dtype))
+
+
+def rwkv_time_mix_step(p: dict, x: jax.Array, x_prev: jax.Array,
+                       state: jax.Array, head_dim: int):
+    """Single-token decode. x: (B,d); state: (B,H,K,V)."""
+    B, d = x.shape
+    H = d // head_dim
+    xr, xk, xv, xw, xg = _ddlerp(p, x[:, None, :], x_prev[:, None, :])
+    r = (xr @ p["wr"]).reshape(B, H, head_dim)
+    k = (xk @ p["wk"]).reshape(B, H, head_dim)
+    v = (xv @ p["wv"]).reshape(B, H, head_dim)
+    g = jax.nn.silu(xg @ p["wg"]).reshape(B, d)
+    logw = -jnp.exp(
+        (p["w0"] + jnp.tanh(xw @ p["td_w1"]) @ p["td_w2"]).astype(jnp.float32)
+    ).reshape(B, H, head_dim)
+    logw = jnp.clip(logw, -40.0, -1e-4)
+    u = jnp.broadcast_to(p["u"][None], (B, H, head_dim))
+    o, s_new = decay_scan_step(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        logw, state.astype(jnp.float32), u=u)
+    o = o.reshape(B, d).astype(x.dtype)
+    o = _group_norm(o, p["ln_x_g"], p["ln_x_b"], H)
+    return (o * g) @ p["wo"], (x, s_new.astype(x.dtype))
+
+
+def rwkv_channel_mix(p: dict, x: jax.Array,
+                     x_prev: jax.Array | None = None):
+    """x: (B,T,d) (or (B,1,d) in decode with x_prev (B,d))."""
+    if x_prev is None:
+        x_prev_seq = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        x_prev_seq = jnp.concatenate([x_prev[:, None, :], x[:, :-1]], 1)
+    dx = x_prev_seq - x
+    xk = x + dx * p["mu_k"]
+    xr = x + dx * p["mu_r"]
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (h @ p["wv"]), x[:, -1, :]

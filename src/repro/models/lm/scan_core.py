@@ -1,0 +1,137 @@
+"""Chunked decayed-outer-product scan — shared core for RWKV6 and SSD.
+
+Both RWKV6's WKV recurrence and Mamba-2/SSD's selective state space are
+instances of
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state:  K x V per head)
+    o_t = r_t^T S_{t-1}                  (+ a per-call diagonal term)
+
+with per-step decay w_t in (0, 1]^K. The chunked form computes inside each
+chunk with dense (L x L) matmuls — MXU-friendly, the same tiling the Pallas
+`wkv6` kernel uses — and carries S across chunks with a `lax.scan`:
+
+    o_t   = r_t . (sum_{i<t} prod_{s=i+1}^{t-1} w_s (.) k_i v_i^T
+                   + prod_{s<=t-1} w_s (.) S_chunk_in)
+    S_out = prod_s w_s (.) S_in + sum_i prod_{s=i+1}^{L} w_s (.) k_i v_i^T
+
+All decay products are formed as exp of *differences of cumulative logs*,
+which are <= 0 — no overflow however long the chunk. Callers add their own
+diagonal (i == t) term: RWKV6's bonus  r.(u (.) k_t) v_t, SSD's  (C.B) x_t.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_decay_scan(r: jax.Array, k: jax.Array, v: jax.Array,
+                       logw: jax.Array, s0: jax.Array, chunk: int = 64
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Strict-past decayed attention.
+
+    Args:
+      r, k, logw: (B, H, T, K); v: (B, H, T, V); s0: (B, H, K, V).
+      logw must be <= 0 (log of per-step decay).
+    Returns: (o: (B, H, T, V), s_final: (B, H, K, V)).
+    """
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    pad = (-T) % chunk
+    if pad:
+        zp = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        r, k, v, logw = zp(r), zp(k), zp(v), zp(logw)
+    n = (T + pad) // chunk
+    # (n, B, H, L, ·)
+    seg = lambda x: x.reshape(B, H, n, chunk, x.shape[-1]).transpose(2, 0, 1, 3, 4)
+    rs, ks, vs, ws = seg(r), seg(k), seg(v), seg(logw)
+
+    sub = max(8, chunk // 4)                     # sub-block size P
+    while chunk % sub:
+        sub -= 1                                 # largest divisor <= target
+    nsub = chunk // sub
+
+    def body(s, xs):
+        rc, kc, vc, wc = xs                      # (B,H,L,K) / (B,H,L,V)
+        logc = jnp.cumsum(wc, axis=2)            # inclusive: log prod_{s<=i}
+        logb = logc - wc                         # exclusive: log prod_{s<i}
+        B_, H_ = rc.shape[:2]
+        # Inter-chunk: r_t decayed back to the chunk boundary, against s.
+        o_inter = jnp.einsum("bhtk,bhkv->bhtv", rc * jnp.exp(logb), s)
+
+        # Intra-chunk (strict lower triangle), two-level decomposition:
+        #   * pairs in the SAME sub-block of size P: exact small einsum
+        #     over (P, P, K) diagonal blocks;
+        #   * pairs spanning sub-blocks: factor the decay product through
+        #     the source sub-block boundary m_s = logc[end of block s]:
+        #       exp(logb_t - logc_i) = exp(logb_t - m_s) exp(m_s - logc_i)
+        #     For t in a LATER block, logb_t <= m_s, and for i inside block
+        #     s, logc_i >= m_s — BOTH exponents are <= 0, so the (L,K) x
+        #     (K,P) matmuls are overflow-free with no clamping and the
+        #     (L,L,K) decay tensor never materializes (K-fold fewer bytes;
+        #     MXU instead of VPU work). Same scheme as the wkv6 kernel.
+        sub_shape = (B_, H_, nsub, sub, rc.shape[-1])
+        logc_s = logc.reshape(sub_shape)
+        logb_s = logb.reshape(sub_shape)
+        rc_s = rc.reshape(sub_shape)
+        kc_s = kc.reshape(sub_shape)
+        vc_s = vc.reshape(B_, H_, nsub, sub, vc.shape[-1])
+        # Diagonal blocks (exact, strict-lower within the block).
+        d = logb_s[..., :, None, :] - logc_s[..., None, :, :]  # (..,P,P,K)
+        tri = (jnp.arange(sub)[:, None] > jnp.arange(sub)[None, :])
+        a_diag = jnp.einsum("bhstk,bhsik,bhstik->bhsti", rc_s, kc_s,
+                            jnp.exp(jnp.minimum(d, 0.0)))
+        a_diag = a_diag * tri[None, None, None].astype(a_diag.dtype)
+        o_diag = jnp.einsum("bhsti,bhsiv->bhstv", a_diag, vc_s)
+        o_intra = o_diag.reshape(B_, H_, chunk, -1)
+        # Cross-block pairs: for each source block s, scale keys back to
+        # the block-s boundary and queries forward from it.
+        m = logc_s[..., -1:, :]                               # (..,nsub,1,K)
+        kt = kc_s * jnp.exp(m - logc_s)                       # <= 1 factors
+        # queries relative to every earlier block boundary:
+        #   rt[s] = rc * exp(logb - m_s), masked to t >= (s+1) * sub
+        mb = m[..., 0, :]                                     # (..,nsub,K)
+        rt = rc[:, :, None] * jnp.exp(
+            jnp.minimum(logb[:, :, None] - mb[..., None, :], 0.0))
+        t_idx = jnp.arange(chunk)[None, :]
+        s_idx = jnp.arange(nsub)[:, None]
+        later = (t_idx >= (s_idx + 1) * sub)                  # (nsub, L)
+        rt = rt * later[None, None, :, :, None].astype(rt.dtype)
+        a_x = jnp.einsum("bhstk,bhsik->bhsti", rt, kt)        # (..,L,P)
+        o_intra = o_intra + jnp.einsum("bhsti,bhsiv->bhtv", a_x, vc_s)
+        # State carry to the next chunk.
+        total = logc[:, :, -1:, :]                            # (B,H,1,K)
+        kd = kc * jnp.exp(total - logc)                       # decay to end
+        s_new = s * jnp.exp(total[:, :, 0, :, None]) \
+            + jnp.einsum("bhik,bhiv->bhkv", kd, vc)
+        return s_new, o_inter + o_intra
+
+    s_final, outs = jax.lax.scan(body, s0, (rs, ks, vs, ws))
+    o = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, T + pad, V)
+    return o[:, :, :T], s_final
+
+
+def decay_scan_step(r, k, v, logw, s, u=None):
+    """Single-token decode step (shapes (B, H, K) / (B, H, V), s (B,H,K,V)).
+
+    Returns o = r.(s + u(.)k v^T) and s' = w(.)s + k v^T  — RWKV convention;
+    pass u=ones for SSD (current-input passthrough)."""
+    if u is None:
+        u = jnp.ones_like(k)
+    kv = k[..., :, None] * v[..., None, :]                    # (B,H,K,V)
+    o = jnp.einsum("bhk,bhkv->bhv", r, s + u[..., :, None] * kv)
+    s_new = jnp.exp(logw)[..., :, None] * s + kv
+    return o, s_new
+
+
+def reference_scan(r, k, v, logw, s0, u):
+    """O(T) lax.scan oracle for tests (RWKV convention with bonus u)."""
+    def step(s, xs):
+        rt, kt, vt, wt = xs
+        o = jnp.einsum("bhk,bhkv->bhv",
+                       rt, s + u[..., :, None] * kt[..., :, None]
+                       * vt[..., None, :])
+        s = jnp.exp(wt)[..., :, None] * s + kt[..., :, None] * vt[..., None, :]
+        return s, o
+    xs = tuple(jnp.moveaxis(x, 2, 0) for x in (r, k, v, logw))
+    s_final, o = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(o, 0, 2), s_final

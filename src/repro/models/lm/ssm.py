@@ -1,0 +1,129 @@
+"""SSD (Mamba-2 style) selective state-space heads for hybrid blocks.
+
+Hymba (arXiv:2411.13676) runs attention heads and Mamba heads *in
+parallel* inside each block. We implement the SSM side as SSD: scalar
+per-head decay a_t = exp(-softplus(dt) * exp(A_log)), shared B/C
+projections (1 group), causal depthwise conv front, gated output with
+RMS-style normalization. The recurrence reuses `scan_core` (decays
+broadcast over the state dim).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.config import SSMConfig
+from repro.models.lm.layers import dense_init, rmsnorm
+from repro.models.lm.scan_core import chunked_decay_scan, decay_scan_step
+
+CONV_K = 4
+
+
+def init_ssm(rng, d_model: int, cfg: SSMConfig) -> dict:
+    ks = jax.random.split(rng, 8)
+    d_inner = cfg.expand * d_model
+    H = d_inner // cfg.head_dim
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * d_inner)),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (CONV_K, d_inner)),
+        "conv_b": jnp.zeros((d_inner,)),
+        "dt_w": dense_init(ks[2], (d_model, H), scale=0.01),
+        "dt_b": jnp.full((H,), -2.0),
+        "a_log": jnp.log(jnp.linspace(1.0, 8.0, H)),
+        "b_proj": dense_init(ks[3], (d_model, cfg.state_dim)),
+        "c_proj": dense_init(ks[4], (d_model, cfg.state_dim)),
+        "d_skip": jnp.ones((H,)),
+        "out_norm": jnp.zeros((d_inner,)),
+        "out_proj": dense_init(ks[5], (d_inner, d_model)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 x_prev: jax.Array | None = None):
+    """Depthwise causal conv via shifted adds. x: (B,T,D); w: (K,D).
+
+    x_prev: (B, K-1, D) tail from the previous segment (decode), else zeros.
+    Returns (y, new_tail)."""
+    B, T, D = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, CONV_K - 1, D), x.dtype)
+    xp = jnp.concatenate([x_prev, x], axis=1)       # (B, T+K-1, D)
+    y = sum(xp[:, i:i + T, :] * w[i] for i in range(CONV_K)) + b
+    return jax.nn.silu(y), xp[:, -(CONV_K - 1):, :]
+
+
+def ssm_forward(p: dict, x: jax.Array, cfg: SSMConfig,
+                state=None, conv_tail=None, chunk: int = 64):
+    """x: (B,T,d_model) -> (y (B,T,d_model), (state, conv_tail))."""
+    B, T, d = x.shape
+    d_inner = cfg.expand * d
+    H = d_inner // cfg.head_dim
+    N = cfg.state_dim
+
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, tail = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_tail)
+    xh = xs.reshape(B, T, H, cfg.head_dim)
+
+    dt = jax.nn.softplus((x @ p["dt_w"] + p["dt_b"]).astype(jnp.float32))
+    logw = -dt * jnp.exp(p["a_log"])                     # (B,T,H) <= 0
+    bt = (x @ p["b_proj"]).astype(jnp.float32)           # (B,T,N)
+    ct = (x @ p["c_proj"]).astype(jnp.float32)
+
+    # Map onto the scan core: r = C (.) w_t (decay includes current step),
+    # k = B_t, v = dt * x_t; diagonal handled explicitly below.
+    r = jnp.broadcast_to(ct[:, :, None, :], (B, T, H, N)).transpose(0, 2, 1, 3)
+    r = r * jnp.exp(logw).transpose(0, 2, 1)[..., None]
+    k = jnp.broadcast_to(bt[:, :, None, :], (B, T, H, N)).transpose(0, 2, 1, 3)
+    v = (xh.astype(jnp.float32)
+         * dt[..., None]).transpose(0, 2, 1, 3)          # (B,H,T,hd)
+    lw = jnp.broadcast_to(
+        logw.transpose(0, 2, 1)[..., None], (B, H, T, N))
+    if state is None:
+        state = jnp.zeros((B, H, N, cfg.head_dim), jnp.float32)
+    o, s_final = chunked_decay_scan(r, k, v, lw, state.astype(jnp.float32),
+                                    chunk=chunk)
+    o = o.transpose(0, 2, 1, 3)                          # (B,T,H,hd)
+    # Diagonal (i == t): (C_t . B_t) dt x_t  + D skip.
+    diag = jnp.einsum("btn,btn->bt", ct, bt)[..., None, None] * v.transpose(
+        0, 2, 1, 3)
+    o = o + diag
+    o = o + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = o.reshape(B, T, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"])
+    return y @ p["out_proj"], (s_final.astype(x.dtype), tail)
+
+
+def ssm_step(p: dict, x: jax.Array, cfg: SSMConfig, state, conv_tail):
+    """Single-token decode. x: (B,1,d)."""
+    y, (s, tail) = _step_impl(p, x, cfg, state, conv_tail)
+    return y, (s, tail)
+
+
+def _step_impl(p, x, cfg, state, conv_tail):
+    B, _, d = x.shape
+    d_inner = cfg.expand * d
+    H = d_inner // cfg.head_dim
+    N = cfg.state_dim
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, tail = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_tail)
+    xh = xs.reshape(B, H, cfg.head_dim)
+    dt = jax.nn.softplus(
+        (x[:, 0] @ p["dt_w"] + p["dt_b"]).astype(jnp.float32))  # (B,H)
+    logw = -dt * jnp.exp(p["a_log"])
+    bt = (x[:, 0] @ p["b_proj"]).astype(jnp.float32)
+    ct = (x[:, 0] @ p["c_proj"]).astype(jnp.float32)
+    r = jnp.broadcast_to(ct[:, None, :], (B, H, N)) * jnp.exp(logw)[..., None]
+    k = jnp.broadcast_to(bt[:, None, :], (B, H, N))
+    v = xh.astype(jnp.float32) * dt[..., None]
+    lw = jnp.broadcast_to(logw[..., None], (B, H, N))
+    # decay_scan_step with u = 1/w would be unstable; compute directly:
+    kv = k[..., :, None] * v[..., None, :]
+    s_new = jnp.exp(lw)[..., None] * state.astype(jnp.float32) + kv
+    o = jnp.einsum("bhn,bhnv->bhv",
+                   jnp.broadcast_to(ct[:, None, :], (B, H, N)), s_new)
+    o = o + p["d_skip"][None, :, None] * xh.astype(jnp.float32)
+    y = o.reshape(B, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"])
+    return y @ p["out_proj"], (s_new.astype(x.dtype), tail)

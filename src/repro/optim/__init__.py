@@ -1,0 +1,5 @@
+from repro.optim.adam import adam_init, adam_update
+from repro.optim.sgd import sgd_update, momentum_init, momentum_update
+
+__all__ = ["adam_init", "adam_update", "sgd_update", "momentum_init",
+           "momentum_update"]

@@ -1,0 +1,23 @@
+"""Plain / momentum SGD (the satellites' on-board optimizer)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_update(params, grads, lr: float):
+    return jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                        params, grads)
+
+
+def momentum_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def momentum_update(params, grads, state, lr: float, beta: float = 0.9):
+    new_state = jax.tree.map(
+        lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+    new_params = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+        params, new_state)
+    return new_params, new_state

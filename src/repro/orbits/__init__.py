@@ -1,0 +1,36 @@
+"""Orbital mechanics substrate (replaces STK).
+
+Pure-JAX two-body propagation for circular orbits, Walker-Star constellation
+construction, rotating-earth ground-station visibility, and access-window
+extraction. Everything is vectorized over (satellite, station, time).
+"""
+from repro.orbits.constants import (
+    MU_EARTH,
+    R_EARTH,
+    OMEGA_EARTH,
+    DEFAULT_ALTITUDE_KM,
+    DEFAULT_ELEVATION_MASK_DEG,
+)
+from repro.orbits.walker import WalkerStar, walker_star_elements
+from repro.orbits.propagation import eci_positions, orbital_period, gs_eci_positions
+from repro.orbits.stations import IGS_STATIONS, station_subnetwork, GroundStation
+from repro.orbits.access import AccessWindows, compute_access_windows, visibility_grid
+
+__all__ = [
+    "MU_EARTH",
+    "R_EARTH",
+    "OMEGA_EARTH",
+    "DEFAULT_ALTITUDE_KM",
+    "DEFAULT_ELEVATION_MASK_DEG",
+    "WalkerStar",
+    "walker_star_elements",
+    "eci_positions",
+    "gs_eci_positions",
+    "orbital_period",
+    "IGS_STATIONS",
+    "GroundStation",
+    "station_subnetwork",
+    "AccessWindows",
+    "compute_access_windows",
+    "visibility_grid",
+]

@@ -1,0 +1,193 @@
+"""Access-window computation: satellite <-> ground-station contact intervals.
+
+The visibility grid is computed in JAX (jit, chunked over time so the
+(K, G, T) tensor never materializes whole), then reduced to per-satellite
+interval lists in numpy for fast event-driven queries by the simulator.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.orbits.constants import (
+    DEFAULT_DT_S,
+    DEFAULT_ELEVATION_MASK_DEG,
+    DEFAULT_HORIZON_S,
+)
+from repro.orbits.propagation import eci_positions, elevation_deg, gs_eci_positions
+from repro.orbits.stations import station_latlon
+from repro.orbits.walker import WalkerStar
+
+
+@functools.partial(jax.jit, static_argnames=("mask_deg",))
+def visibility_grid(elements: dict, lat: jax.Array, lon: jax.Array,
+                    t: jax.Array, mask_deg: float = DEFAULT_ELEVATION_MASK_DEG
+                    ) -> jax.Array:
+    """(K, G, T) boolean visibility at elevation >= mask."""
+    sat = eci_positions(elements, t)
+    gs = gs_eci_positions(lat, lon, t)
+    return elevation_deg(sat, gs) >= mask_deg
+
+
+def _bools_to_intervals(vis: np.ndarray, t0: float, dt: float
+                        ) -> list[tuple[float, float]]:
+    """Convert a 1-D boolean track to [(start, end)] intervals."""
+    if not vis.any():
+        return []
+    padded = np.concatenate([[False], vis, [False]])
+    edges = np.flatnonzero(padded[1:] != padded[:-1])
+    starts, ends = edges[0::2], edges[1::2]
+    return [(t0 + s * dt, t0 + e * dt) for s, e in zip(starts, ends)]
+
+
+def _merge_intervals(intervals: list[tuple[float, float]]
+                     ) -> list[tuple[float, float]]:
+    if not intervals:
+        return []
+    intervals = sorted(intervals)
+    out = [list(intervals[0])]
+    for s, e in intervals[1:]:
+        if s <= out[-1][1]:
+            out[-1][1] = max(out[-1][1], e)
+        else:
+            out.append([s, e])
+    return [tuple(x) for x in out]
+
+
+@dataclasses.dataclass
+class AccessWindows:
+    """Per-satellite ground-contact intervals over the simulation horizon.
+
+    Attributes:
+      per_sat: list (len K) of (starts, ends) float64 arrays — merged over
+        all stations in the network.
+      per_sat_station: list (len K) of list (len G) of (starts, ends) —
+        unmerged, used by augmentations that care which station is hit.
+      cluster: (K,) int cluster id per satellite.
+      horizon_s: simulation horizon.
+    """
+
+    per_sat: list[tuple[np.ndarray, np.ndarray]]
+    per_sat_station: list[list[tuple[np.ndarray, np.ndarray]]]
+    cluster: np.ndarray
+    horizon_s: float
+    dt_s: float
+
+    @property
+    def n_sats(self) -> int:
+        return len(self.per_sat)
+
+    def next_window(self, k: int, t: float) -> tuple[float, float] | None:
+        """Earliest contact window for satellite k that is active at or
+        starts after time t. Returns (start, end) with start >= t semantics:
+        if t falls inside a window, returns (t, window_end)."""
+        starts, ends = self.per_sat[k]
+        if len(starts) == 0:
+            return None
+        i = bisect.bisect_right(ends, t)  # first window with end > t
+        if i >= len(starts):
+            return None
+        s, e = starts[i], ends[i]
+        return (max(s, t), e)
+
+    def contact_fraction(self, k: int) -> float:
+        starts, ends = self.per_sat[k]
+        return float((ends - starts).sum() / self.horizon_s)
+
+    def cluster_members(self, k: int) -> np.ndarray:
+        return np.flatnonzero(self.cluster == self.cluster[k])
+
+    def subset(self, n_stations: int) -> "AccessWindows":
+        """Windows restricted to the first n stations (the paper's subset
+        ladder is nested, so one 13-station computation serves all six
+        network sizes)."""
+        per_sat_station = [row[:n_stations] for row in self.per_sat_station]
+        per_sat = []
+        for row in per_sat_station:
+            merged = _merge_intervals(
+                [(float(s), float(e)) for st, en in row
+                 for s, e in zip(st, en)])
+            per_sat.append((np.array([s for s, _ in merged]),
+                            np.array([e for _, e in merged])))
+        return AccessWindows(per_sat=per_sat,
+                             per_sat_station=per_sat_station,
+                             cluster=self.cluster, horizon_s=self.horizon_s,
+                             dt_s=self.dt_s)
+
+    def cluster_next_window(self, cluster_id: int, t: float
+                            ) -> tuple[int, float, float] | None:
+        """Earliest contact among all satellites of a cluster: (sat, s, e)."""
+        best = None
+        for k in np.flatnonzero(self.cluster == cluster_id):
+            w = self.next_window(int(k), t)
+            if w is not None and (best is None or w[0] < best[1]):
+                best = (int(k), w[0], w[1])
+        return best
+
+
+def compute_access_windows(
+    constellation: WalkerStar,
+    stations,
+    horizon_s: float = DEFAULT_HORIZON_S,
+    dt_s: float = DEFAULT_DT_S,
+    mask_deg: float = DEFAULT_ELEVATION_MASK_DEG,
+    chunk_steps: int = 8192,
+) -> AccessWindows:
+    """Compute contact intervals for every (satellite, station) pair.
+
+    Time is chunked so device memory stays bounded at
+    K * G * chunk_steps bools.
+    """
+    elements = constellation.elements()
+    lat, lon = station_latlon(stations)
+    K, G = constellation.n_sats, len(stations)
+    n_steps = int(np.ceil(horizon_s / dt_s)) + 1
+
+    raw: list[list[list[tuple[float, float]]]] = [
+        [[] for _ in range(G)] for _ in range(K)
+    ]
+    for c0 in range(0, n_steps, chunk_steps):
+        c1 = min(c0 + chunk_steps, n_steps)
+        t = (np.arange(c0, c1) * dt_s).astype(np.float64)
+        vis = np.asarray(visibility_grid(elements, lat, lon, jnp.asarray(t),
+                                         mask_deg=mask_deg))
+        # Vectorized edge extraction across all (sat, station) tracks.
+        padded = np.zeros((K, G, vis.shape[2] + 2), bool)
+        padded[:, :, 1:-1] = vis
+        edges = padded[:, :, 1:] != padded[:, :, :-1]
+        ks, gs, ts = np.nonzero(edges)
+        # Edges alternate rise/set per (k, g) track; nonzero returns them
+        # in row-major order so consecutive pairs within a track match up.
+        t0 = float(t[0])
+        for k, g, rise, fall in zip(ks[0::2], gs[0::2],
+                                    t0 + ts[0::2] * dt_s,
+                                    t0 + ts[1::2] * dt_s):
+            raw[int(k)][int(g)].append((float(rise), float(fall)))
+
+    per_sat_station: list[list[tuple[np.ndarray, np.ndarray]]] = []
+    per_sat: list[tuple[np.ndarray, np.ndarray]] = []
+    for k in range(K):
+        row = []
+        merged_all: list[tuple[float, float]] = []
+        for g in range(G):
+            ivs = _merge_intervals(raw[k][g])  # stitch chunk boundaries
+            row.append((np.array([s for s, _ in ivs]),
+                        np.array([e for _, e in ivs])))
+            merged_all.extend(ivs)
+        per_sat_station.append(row)
+        merged = _merge_intervals(merged_all)
+        per_sat.append((np.array([s for s, _ in merged]),
+                        np.array([e for _, e in merged])))
+
+    return AccessWindows(
+        per_sat=per_sat,
+        per_sat_station=per_sat_station,
+        cluster=elements["cluster"],
+        horizon_s=horizon_s,
+        dt_s=dt_s,
+    )

@@ -1,0 +1,114 @@
+"""Two-body propagation for circular orbits + rotating-earth station positions.
+
+All functions are jit-able and vectorized: time grids are the trailing axis.
+Positions are ECI (earth-centered inertial) in meters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.orbits.constants import MU_EARTH, OMEGA_EARTH, R_EARTH
+
+
+def orbital_period(a_m: float) -> float:
+    """Keplerian period [s] for semi-major axis a [m]."""
+    return float(2.0 * np.pi * np.sqrt(a_m**3 / MU_EARTH))
+
+
+def mean_motion(a_m) -> jax.Array:
+    return jnp.sqrt(MU_EARTH / jnp.asarray(a_m) ** 3)
+
+
+def eci_positions(elements: dict, t: jax.Array) -> jax.Array:
+    """Satellite ECI positions.
+
+    Args:
+      elements: dict from `walker_star_elements` (raan (K,), anomaly0 (K,),
+        a scalar, inc scalar).
+      t: (T,) times [s] since epoch.
+
+    Returns:
+      (K, T, 3) positions [m].
+
+    For a circular orbit the in-plane angle is theta(t) = anomaly0 + n*t.
+    Plane orientation: rotate by inclination about x, then RAAN about z.
+    """
+    raan = jnp.asarray(elements["raan"])[:, None]       # (K,1)
+    theta = jnp.asarray(elements["anomaly0"])[:, None] + mean_motion(
+        elements["a"]
+    ) * jnp.asarray(t)[None, :]                          # (K,T)
+    a = jnp.asarray(elements["a"])
+    inc = jnp.asarray(elements["inc"])
+
+    # In-plane (perifocal) coordinates.
+    xp = a * jnp.cos(theta)
+    yp = a * jnp.sin(theta)
+
+    cos_i, sin_i = jnp.cos(inc), jnp.sin(inc)
+    cos_O, sin_O = jnp.cos(raan), jnp.sin(raan)
+
+    # R_z(RAAN) @ R_x(inc) @ [xp, yp, 0]
+    x = cos_O * xp - sin_O * cos_i * yp
+    y = sin_O * xp + cos_O * cos_i * yp
+    z = sin_i * yp
+    return jnp.stack([x, y, z], axis=-1)  # (K,T,3)
+
+
+def gs_eci_positions(lat_deg: jax.Array, lon_deg: jax.Array, t: jax.Array,
+                     gmst0: float = 0.0) -> jax.Array:
+    """Ground-station ECI positions on the rotating earth.
+
+    Args:
+      lat_deg, lon_deg: (G,) geodetic coordinates (spherical earth).
+      t: (T,) times [s].
+      gmst0: Greenwich sidereal angle at epoch [rad].
+
+    Returns: (G, T, 3) positions [m].
+    """
+    lat = jnp.deg2rad(jnp.asarray(lat_deg))[:, None]    # (G,1)
+    lon = jnp.deg2rad(jnp.asarray(lon_deg))[:, None]
+    theta_g = gmst0 + OMEGA_EARTH * jnp.asarray(t)[None, :]  # (1,T)
+    ang = lon + theta_g                                  # (G,T)
+    cos_lat = jnp.cos(lat)
+    x = R_EARTH * cos_lat * jnp.cos(ang)
+    y = R_EARTH * cos_lat * jnp.sin(ang)
+    z = R_EARTH * jnp.sin(lat) * jnp.ones_like(ang)
+    return jnp.stack([x, y, z], axis=-1)                 # (G,T,3)
+
+
+def elevation_deg(sat_eci: jax.Array, gs_eci: jax.Array) -> jax.Array:
+    """Elevation angle [deg] of each satellite above each station's horizon.
+
+    Args:
+      sat_eci: (K, T, 3); gs_eci: (G, T, 3).
+    Returns: (K, G, T).
+    """
+    rel = sat_eci[:, None, :, :] - gs_eci[None, :, :, :]      # (K,G,T,3)
+    rel_norm = jnp.linalg.norm(rel, axis=-1)
+    up = gs_eci / jnp.linalg.norm(gs_eci, axis=-1, keepdims=True)  # (G,T,3)
+    sin_el = jnp.einsum("kgtc,gtc->kgt", rel, up) / jnp.maximum(rel_norm, 1.0)
+    return jnp.rad2deg(jnp.arcsin(jnp.clip(sin_el, -1.0, 1.0)))
+
+
+def sat_to_sat_range_m(sat_eci: jax.Array) -> jax.Array:
+    """Pairwise inter-satellite ranges (K, K, T) with line-of-sight check.
+
+    Returns +inf where the earth (with a 100 km atmosphere pad) blocks the
+    line of sight, else the Euclidean range.
+    """
+    diff = sat_eci[None, :] - sat_eci[:, None]           # (K,K,T,3) j - i
+    rng = jnp.linalg.norm(diff, axis=-1)
+    # Line-of-sight: minimum distance from earth's center to the segment
+    # a -> a + diff (satellite i to satellite j).
+    a = sat_eci[:, None]                                 # (K,1,T,3)
+    tt = jnp.clip(-jnp.einsum("kjtc,kjtc->kjt",
+                              jnp.broadcast_to(a, diff.shape), diff)
+                  / jnp.maximum(jnp.einsum("kjtc,kjtc->kjt", diff, diff),
+                                1.0),
+                  0.0, 1.0)
+    closest = a + tt[..., None] * diff
+    min_r = jnp.linalg.norm(closest, axis=-1)
+    blocked = min_r < (R_EARTH + 100e3)
+    return jnp.where(blocked, jnp.inf, rng)

@@ -1,0 +1,8 @@
+from repro.sharding.specs import (
+    param_pspecs,
+    batch_pspec,
+    cache_pspecs,
+    MeshAxes,
+)
+
+__all__ = ["param_pspecs", "batch_pspec", "cache_pspecs", "MeshAxes"]

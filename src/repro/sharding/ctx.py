@@ -1,0 +1,87 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; the launcher declares which mesh axes carry
+the batch (data-parallel) dimension before tracing, and layers call
+`constrain_batch` as a GSPMD hint. Without a declared context the calls
+are no-ops (CPU smoke tests, federated simulation).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_DP_AXES: Optional[tuple[str, ...]] = None
+
+
+@contextlib.contextmanager
+def activation_sharding(dp_axes: tuple[str, ...] | None):
+    """Declare the data-parallel mesh axes for the enclosed trace."""
+    global _DP_AXES
+    prev = _DP_AXES
+    _DP_AXES = tuple(dp_axes) if dp_axes else None
+    try:
+        yield
+    finally:
+        _DP_AXES = prev
+
+
+def constrain_batch(x: jax.Array, trailing: tuple | None = None):
+    """Constrain axis 0 of x to the declared data-parallel axes."""
+    if _DP_AXES is None or x.ndim == 0:
+        return x
+    rest = trailing if trailing is not None else (None,) * (x.ndim - 1)
+    return jax.lax.with_sharding_constraint(x, P(_DP_AXES, *rest))
+
+
+_MODEL_AXIS: Optional[str] = None
+_EP = None  # (dp_axes, ep axis, size, mesh)
+
+
+@contextlib.contextmanager
+def expert_parallel(dp_axes: tuple | None, axis: str | None = None,
+                    size: int = 0, mesh=None):
+    """Declare the mesh axis carrying expert parallelism (token all-to-all
+    MoE). None disables; layers fall back to row-local dispatch."""
+    global _EP
+    prev = _EP
+    _EP = (tuple(dp_axes), axis, size, mesh) if axis else None
+    try:
+        yield
+    finally:
+        _EP = prev
+
+
+def ep_axis():
+    return _EP
+
+
+@contextlib.contextmanager
+def model_axis(name: str | None):
+    """Declare the tensor-parallel axis (for KV-cache layout alignment)."""
+    global _MODEL_AXIS
+    prev = _MODEL_AXIS
+    _MODEL_AXIS = name
+    try:
+        yield
+    finally:
+        _MODEL_AXIS = prev
+
+
+def constrain_kv(x: jax.Array, mesh_model_size: int | None = None):
+    """Align a (B, S, KV, hd) K/V tensor with the decode-cache layout:
+    batch over dp; kv-heads over the model axis when divisible, else
+    head_dim. Without this hint the freshly-projected token's sharding
+    mismatches the cache and GSPMD *replicates the entire cache in f32*
+    to perform the dynamic-update-slice (qwen1.5-110b decode: 86 GB/step
+    of all-gather; EXPERIMENTS.md §Perf iteration). Mirrors
+    sharding.specs.cache_pspecs."""
+    if _MODEL_AXIS is None or x.ndim != 4:
+        return constrain_batch(x)
+    # The cache itself is sequence-sharded (specs.cache_pspecs); the fresh
+    # token is one position, so it enters replicated across the model axis
+    # and the dynamic-update-slice becomes a predicated local write.
+    return jax.lax.with_sharding_constraint(
+        x, P(_DP_AXES, None, None, None))

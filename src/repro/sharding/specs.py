@@ -1,0 +1,204 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs.
+
+Strategy (DESIGN.md section 8): FSDP over the ("pod", "data") axes +
+tensor parallelism over "model".
+
+  * projections (…, d_in, d_out): d_in over fsdp, d_out over model for the
+    "up" family (wq/wk/wv/w1/w3, gates); transposed for the "down" family
+    (wo/w2, out_proj).
+  * MoE expert stacks (E, d, ff): E over fsdp when divisible (expert-FSDP),
+    else d over fsdp; expert ff always over model.
+  * embeddings (V, d): V over model (TP vocab), d over fsdp.
+  * norms / scalars / tiny LoRA factors: replicated.
+
+Rules match on the *leaf key name*; a leading stacked-layer axis (from
+scanned segments) is detected by arity and padded with None. Divisibility
+is checked against the mesh so e.g. grok's 8 experts fall back gracefully.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    fsdp: tuple[str, ...] = ("data",)      # ("pod","data") when multi-pod
+    model: str = "model"
+
+    @classmethod
+    def from_mesh(cls, mesh) -> "MeshAxes":
+        names = mesh.axis_names
+        fsdp = tuple(n for n in names if n in ("pod", "data"))
+        return cls(fsdp=fsdp, model="model" if "model" in names else None)
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _fits(dim: int, mesh, axis) -> bool:
+    n = _axis_size(mesh, axis)
+    return n > 1 and dim % n == 0
+
+
+# Leaf-name -> base rule builder. Receives (shape_without_layer_axis, ax,
+# mesh) and returns a PartitionSpec of the same arity.
+def _rule(name: str, shape, ax: MeshAxes, mesh):
+    F, M = ax.fsdp, ax.model
+    nd = len(shape)
+
+    up = {"wq", "wk", "wv", "wg", "wr", "w1", "w3", "in_proj", "wq_b",
+          "wk_b", "wv_b", "lm_head", "mtp_head"}
+    down = {"wo", "w2", "out_proj"}
+    fsdp_only = {"wq_a", "wkv_a", "td_w1", "tm_w1", "dt_w", "b_proj",
+                 "c_proj", "router"}
+
+    if name == "embed" and nd == 2:
+        return P(M if _fits(shape[0], mesh, M) else None,
+                 F if _fits(shape[1], mesh, F) else None)
+    if name in up and nd == 2:
+        return P(F if _fits(shape[0], mesh, F) else None,
+                 M if _fits(shape[1], mesh, M) else None)
+    if name in down and nd == 2:
+        return P(M if _fits(shape[0], mesh, M) else None,
+                 F if _fits(shape[1], mesh, F) else None)
+    if name in fsdp_only and nd == 2:
+        return P(F if _fits(shape[0], mesh, F) else None, None)
+    if name in ("w1", "w3") and nd == 3:          # MoE experts (E, d, ff)
+        e_f = _fits(shape[0], mesh, F)
+        return P(F if e_f else None,
+                 None if e_f else (F if _fits(shape[1], mesh, F) else None),
+                 M if _fits(shape[2], mesh, M) else None)
+    if name == "w2" and nd == 3:                  # (E, ff, d)
+        e_f = _fits(shape[0], mesh, F)
+        return P(F if e_f else None,
+                 M if _fits(shape[1], mesh, M) else None,
+                 None if e_f else (F if _fits(shape[2], mesh, F) else None))
+    if name == "conv_w" and nd == 2:              # (K, d_inner)
+        return P(None, M if _fits(shape[1], mesh, M) else None)
+    return P(*([None] * nd))                      # replicate
+
+
+# Params + f32 Adam state (2 + 4 + 4 + 4 bytes/param) per chip below this
+# threshold => drop the FSDP axes entirely (TP-only). Small models on big
+# meshes are otherwise *collective-bound on weight all-gathers*: rwkv6-1.6b
+# went from 7.8 s -> ~0 s collective term per train step (EXPERIMENTS.md
+# §Perf iteration 2).
+AUTO_TP_ONLY_BYTES = 4 << 30
+
+
+def _tp_only_fits(params, mesh, ax: "MeshAxes") -> bool:
+    if ax.model is None:
+        return False
+    elems = sum(int(l.size) for l in jax.tree.leaves(params))
+    per_chip = elems * 14 / _axis_size(mesh, ax.model)
+    return per_chip <= AUTO_TP_ONLY_BYTES
+
+
+def small_model_mode(params, mesh) -> bool:
+    """True when the TP-only / replicate-weights-in-step regime applies."""
+    ax = MeshAxes.from_mesh(mesh)
+    return _tp_only_fits(params, mesh, ax)
+
+
+def param_pspecs(params, mesh, *, allow_tp_only: bool = True,
+                 mode: str = "train"):
+    """PartitionSpec pytree matching `params` (handles stacked-layer axes).
+
+    mode="serve": weights must be RESIDENT — re-all-gathering FSDP shards
+    every decode step costs ICI bytes ~ param_bytes x (fsdp-1)/fsdp per
+    token batch (qwen1.5-110b decode: a 5.5 s collective term vs 2.3 ms of
+    compute; EXPERIMENTS.md §Perf). Serve mode therefore shards weights
+    over "model" (+ "pod" when present) only and replicates across "data",
+    which carries the request batch / KV cache instead.
+    """
+    ax = MeshAxes.from_mesh(mesh)
+    if mode == "serve":
+        ax = dataclasses.replace(
+            ax, fsdp=tuple(a for a in ax.fsdp if a == "pod"))
+    elif allow_tp_only and _tp_only_fits(params, mesh, ax):
+        ax = dataclasses.replace(ax, fsdp=())
+
+    def spec_for(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        # Stacked layer axis: every leaf under "segments"/"encoder" has it.
+        stacked = any(
+            isinstance(e, jax.tree_util.DictKey)
+            and str(e.key) in ("segments", "encoder") for e in path)
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        base = _rule(name or "", shape, ax, mesh)
+        if stacked:
+            return P(None, *base)
+        return base
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def batch_pspec(mesh, batch_size: int):
+    """Token batches shard over the data-parallel axes when divisible."""
+    ax = MeshAxes.from_mesh(mesh)
+    dp = ax.fsdp if _fits(batch_size, mesh, ax.fsdp) else None
+    return dp
+
+
+def cache_pspecs(cache, mesh, batch_size: int):
+    """Decode-cache specs: batch over dp; kv-heads (or head_dim) over model
+    when divisible, else replicated."""
+    ax = MeshAxes.from_mesh(mesh)
+    dp = ax.fsdp if _fits(batch_size, mesh, ax.fsdp) else None
+    M = ax.model
+
+    def spec_for(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        stacked = any(
+            isinstance(e, jax.tree_util.DictKey)
+            and str(e.key) == "segments" for e in path)
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        if name == "pos":
+            return P()
+        if name in ("k", "v", "xk", "xv") and len(shape) == 4:
+            # Sequence-sharded cache: attention over a seq-sharded cache
+            # reduces to KB-scale partial-softmax all-reduces, vs GB-scale
+            # gathers for head/hd sharding when kv_heads < mesh model size
+            # (qwen1.5-110b decode collective term 5.5 s -> 24 ms;
+            # EXPERIMENTS.md §Perf iteration 3).
+            s_m = _fits(shape[1], mesh, M)
+            kv_m = (not s_m) and _fits(shape[2], mesh, M)
+            hd_m = (not s_m and not kv_m) and _fits(shape[3], mesh, M)
+            base = P(dp, M if s_m else None, M if kv_m else None,
+                     M if hd_m else None)
+        elif name in ("c_kv", "k_rope") and len(shape) == 3:
+            base = P(dp, M if _fits(shape[1], mesh, M) else None, None)
+        elif name == "s" and len(shape) == 4:      # rwkv state (B,H,K,V)
+            base = P(dp, M if _fits(shape[1], mesh, M) else None, None, None)
+        elif name == "ssm_s" and len(shape) == 4:
+            base = P(dp, M if _fits(shape[1], mesh, M) else None, None, None)
+        elif name in ("tm_x", "cm_x") and len(shape) == 2:
+            base = P(dp, None)
+        elif name == "conv_tail" and len(shape) == 3:
+            base = P(dp, None, M if _fits(shape[2], mesh, M) else None)
+        else:
+            base = P(*([dp] + [None] * (len(shape) - 1))) if shape else P()
+        if stacked:
+            return P(None, *base)
+        return base
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)

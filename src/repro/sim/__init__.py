@@ -1,0 +1,4 @@
+from repro.sim.engine import ConstellationSim, SimConfig
+from repro.sim.metrics import RoundRecord, SimResult
+
+__all__ = ["ConstellationSim", "SimConfig", "RoundRecord", "SimResult"]

@@ -1,0 +1,305 @@
+"""ConstellationSim — event-driven execution of a space-ified FL algorithm.
+
+Couples three layers:
+  * orbital geometry  (`repro.orbits`)     — who can talk to whom, when;
+  * the FL algorithm  (`repro.core`)       — selection + client regime +
+                                             aggregation;
+  * real gradients    (`repro.core.client`)— vmapped on-board SGD on the
+                                             federated dataset.
+
+Synchronous algorithms (FedAvg/FedProx families) run the round-barrier
+loop of Algorithms 1-2; FedBuff runs the asynchronous buffered event loop
+of Algorithm 3. Both produce the paper's three metrics per round: accuracy,
+round duration, and per-satellite idle time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.client import evaluate, make_client_update
+from repro.core.spaceify import SpaceifiedAlgorithm
+from repro.core.strategies.base import ClientWorkMode
+from repro.core.timing import HardwareModel
+from repro.data.femnist import FederatedDataset
+from repro.models.femnist_mlp import femnist_mlp_apply, femnist_mlp_init
+from repro.orbits.access import AccessWindows, compute_access_windows
+from repro.orbits.walker import WalkerStar
+from repro.sim.metrics import RoundRecord, SimResult
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    max_rounds: int = 500            # paper: 500-round cap
+    horizon_s: float = 90 * 86400.0  # paper: 3-month scenario
+    clients_per_round: int = 10      # C
+    batch_size: int = 32
+    lr: float = 0.05
+    eval_every: int = 5              # rounds between evaluations
+    max_steps: int = 128             # static bound on local SGD steps/round
+    seed: int = 0
+    train: bool = True               # False: timing-only sweep (no gradients)
+
+
+class ConstellationSim:
+    """Run one (constellation x network x algorithm) scenario."""
+
+    def __init__(
+        self,
+        constellation: WalkerStar,
+        stations,
+        algorithm: SpaceifiedAlgorithm,
+        data: FederatedDataset | None = None,
+        hw: HardwareModel | None = None,
+        cfg: SimConfig | None = None,
+        access: AccessWindows | None = None,
+        apply_fn=femnist_mlp_apply,
+        init_fn=femnist_mlp_init,
+    ):
+        self.constellation = constellation
+        self.stations = stations
+        self.alg = algorithm
+        self.hw = hw or HardwareModel()
+        self.cfg = cfg or SimConfig()
+        self.data = data
+        self.apply_fn = apply_fn
+        self.init_fn = init_fn
+        self.aw = access if access is not None else compute_access_windows(
+            constellation, stations, horizon_s=self.cfg.horizon_s)
+        if self.cfg.train:
+            assert data is not None and data.n_clients == constellation.n_sats
+            # Jitted updaters are built lazily per power-of-two step bound so
+            # a 45-step FedAvg round never pays for the 128-step worst case.
+            self._updaters: dict[tuple[int, bool], object] = {}
+
+    def _updater(self, bound: int, anchored: bool):
+        key = (bound, anchored)
+        if key not in self._updaters:
+            cu = make_client_update(
+                self.apply_fn, lr=self.cfg.lr,
+                batch_size=self.cfg.batch_size, max_steps=bound)
+            axes = (0, 0 if anchored else None, 0, 0, 0, 0, None, 0)
+            self._updaters[key] = jax.jit(jax.vmap(cu, in_axes=axes))
+        return self._updaters[key]
+
+    @staticmethod
+    def _bound(steps: np.ndarray | list[int]) -> int:
+        m = max(int(np.max(steps)), 1)
+        return 1 << (m - 1).bit_length()
+
+    # ------------------------------------------------------------------ #
+    def run(self) -> SimResult:
+        K = self.constellation.n_sats
+        if K < 2:
+            # A single satellite cannot federate (heatmap top-left = 0).
+            return SimResult(self.alg.name, K, len(self.stations), [], [])
+        if self.alg.synchronous:
+            return self._run_sync()
+        return self._run_async()
+
+    # ------------------------------------------------------------------ #
+    def _steps_for(self, k: int, epochs: int) -> int:
+        n_k = int(self.data.n[k]) if self.data is not None else 256
+        spe = max(1, n_k // self.cfg.batch_size)
+        return int(np.clip(epochs * spe, 1, self.cfg.max_steps))
+
+    def _train_round(self, global_params, plans, rng):
+        """Run vmapped ClientUpdate for the selected satellites."""
+        ks = [p.k for p in plans]
+        x = jnp.asarray(self.data.x[ks])
+        y = jnp.asarray(self.data.y[ks])
+        n = jnp.asarray(self.data.n[ks])
+        steps_np = [self._steps_for(p.k, p.epochs) for p in plans]
+        steps = jnp.asarray(steps_np, jnp.int32)
+        anchors = global_params
+        stacked0 = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (len(ks),) + a.shape), global_params)
+        rngs = jax.random.split(rng, len(ks))
+        update = self._updater(self._bound(steps_np), anchored=False)
+        out = update(stacked0, anchors, x, y, n, steps,
+                     self.alg.strategy.prox_mu, rngs)
+        weights = jnp.asarray(self.data.n[ks], jnp.float32)
+        return out, weights
+
+    def _eval(self, global_params, t: float) -> float:
+        """Evaluation-stage client selection: same contact protocol."""
+        c = min(self.cfg.clients_per_round, self.constellation.n_sats)
+        plans = self.alg.selector.select(
+            self.aw, t, range(self.constellation.n_sats), c,
+            self.alg.strategy, self.hw, self.alg.local_epochs,
+            self.alg.min_epochs)
+        ks = [p.k for p in plans] or list(range(min(c, self.data.n_clients)))
+        acc = evaluate(self.apply_fn, global_params,
+                       jnp.asarray(self.data.x_eval[ks]),
+                       jnp.asarray(self.data.y_eval[ks]),
+                       jnp.asarray(self.data.n_eval[ks]))
+        return float(acc)
+
+    # ------------------------------------------------------------------ #
+    def _run_sync(self) -> SimResult:
+        cfg, hw, alg = self.cfg, self.hw, self.alg
+        K = self.constellation.n_sats
+        c = min(cfg.clients_per_round, K)
+        rng = jax.random.PRNGKey(cfg.seed)
+        rng, init_rng = jax.random.split(rng)
+        global_params = self.init_fn(init_rng) if cfg.train else None
+
+        t = 0.0
+        rounds: list[RoundRecord] = []
+        curve: list[tuple[int, float, float]] = []
+        for r in range(cfg.max_rounds):
+            if t >= cfg.horizon_s:
+                break
+            plans = alg.selector.select(
+                self.aw, t, range(K), c, alg.strategy, hw,
+                alg.local_epochs, alg.min_epochs)
+            if not plans:
+                break
+            t_end = max(p.tx_end for p in plans)
+            if t_end > cfg.horizon_s:
+                break
+
+            if cfg.train:
+                rng, sub = jax.random.split(rng)
+                stacked, weights = self._train_round(global_params, plans, sub)
+                global_params = alg.strategy.aggregate(
+                    global_params, stacked, weights,
+                    jnp.zeros((len(plans),), jnp.int32))
+
+            rec = RoundRecord(
+                idx=r, t_start=t, t_end=t_end,
+                participants=[p.k for p in plans],
+                epochs=[p.epochs for p in plans],
+                idle_s=[max(0.0, (t_end - t)
+                            - (p.rx_end - p.rx_start)
+                            - (p.train_end - p.train_start)
+                            - (p.tx_end - p.tx_start)) for p in plans],
+                compute_s=[p.train_end - p.train_start for p in plans],
+                comm_s=[(p.rx_end - p.rx_start) + (p.tx_end - p.tx_start)
+                        for p in plans],
+                relays=[p.relay for p in plans],
+                staleness=[0] * len(plans),
+            )
+            if cfg.train and (r % cfg.eval_every == 0
+                              or r == cfg.max_rounds - 1):
+                rec.accuracy = self._eval(global_params, t_end)
+                curve.append((r, t_end, rec.accuracy))
+            rounds.append(rec)
+            t = t_end
+        return SimResult(alg.name, K, len(self.stations), rounds, curve)
+
+    # ------------------------------------------------------------------ #
+    def _run_async(self) -> SimResult:
+        """FedBuff event loop: every satellite cycles contact->train->upload;
+        the server aggregates whenever D updates have buffered."""
+        cfg, hw, alg = self.cfg, self.hw, self.alg
+        K = self.constellation.n_sats
+        c = min(cfg.clients_per_round, K)
+        D = max(1, int(round(alg.buffer_frac * c)))
+        rng = jax.random.PRNGKey(cfg.seed)
+        rng, init_rng = jax.random.split(rng)
+        global_params = self.init_fn(init_rng) if cfg.train else None
+        history = {0: global_params}
+        version = 0
+        last_agg_t = 0.0
+
+        # Event heap of (upload_done_t, sat, version_at_download, epochs,
+        # download_t, train_span, comm_s).
+        heap: list = []
+
+        def schedule_cycle(k: int, t: float, ver: int):
+            w = self.aw.next_window(k, t)
+            if w is None:
+                return
+            rx_end = w[0] + hw.tx_time_s
+            # Train across the inter-pass gap; upload at the *next* pass
+            # (never the download pass itself).
+            nxt = self.aw.next_window(k, w[1] + 1.0)
+            if nxt is None:
+                return
+            epochs = max(1, hw.epochs_between(rx_end, nxt[0]))
+            train_span = nxt[0] - rx_end   # continuous on-board training
+            tx_end = nxt[0] + hw.tx_time_s
+            heapq.heappush(heap, (tx_end, k, ver, epochs, w[0], train_span,
+                                  2 * hw.tx_time_s))
+
+        for k in range(K):
+            schedule_cycle(k, 0.0, 0)
+
+        buffer: list = []
+        rounds: list[RoundRecord] = []
+        curve: list[tuple[int, float, float]] = []
+        while heap and len(rounds) < cfg.max_rounds:
+            tx_end, k, ver, epochs, dl_t, train_span, comm_s = heapq.heappop(heap)
+            if tx_end > cfg.horizon_s:
+                break
+            buffer.append((k, ver, epochs, dl_t, train_span, comm_s, tx_end))
+
+            if len(buffer) < D:
+                # Satellite immediately re-downloads in the same pass and
+                # keeps training — FedBuff's no-idle property (Figure 9c).
+                schedule_cycle(k, tx_end, version)
+                continue
+
+            # --- aggregate the buffer ---------------------------------- #
+            t_agg = tx_end
+            staleness = np.array([version - b[1] for b in buffer], np.int32)
+            admit = staleness <= alg.strategy.max_staleness
+            weights = np.array(
+                [float(self.data.n[b[0]]) if cfg.train else 1.0
+                 for b in buffer], np.float32) * admit
+            if cfg.train:
+                ks = [b[0] for b in buffer]
+                anchors = jax.tree.map(
+                    lambda *xs: jnp.stack(xs),
+                    *[history[b[1]] for b in buffer])
+                rng, sub = jax.random.split(rng)
+                rngs = jax.random.split(sub, len(ks))
+                steps_np = [self._steps_for(b[0], b[2]) for b in buffer]
+                steps = jnp.asarray(steps_np, jnp.int32)
+                update = self._updater(self._bound(steps_np), anchored=True)
+                stacked = update(
+                    anchors, anchors,
+                    jnp.asarray(self.data.x[ks]), jnp.asarray(self.data.y[ks]),
+                    jnp.asarray(self.data.n[ks]), steps,
+                    alg.strategy.prox_mu, rngs)
+                global_params = alg.strategy.aggregate(
+                    global_params, stacked, jnp.asarray(weights),
+                    jnp.asarray(staleness))
+            version += 1
+            history[version] = global_params
+            # The buffer-filling satellite re-downloads the *new* model.
+            schedule_cycle(k, tx_end, version)
+            # Prune history entries no in-flight client still anchors on.
+            outstanding = [e[2] for e in heap]
+            keep_from = min(outstanding, default=version)
+            for v in list(history):
+                if v < keep_from:
+                    del history[v]
+
+            rec = RoundRecord(
+                idx=len(rounds), t_start=last_agg_t, t_end=t_agg,
+                participants=[b[0] for b in buffer],
+                epochs=[b[2] for b in buffer],
+                # Async clients only idle while a pass is out of reach after
+                # the duty-cycle cap ends; within the buffer span their time
+                # is train_span + comms.
+                idle_s=[max(0.0, (b[6] - b[3]) - b[4] - b[5]) for b in buffer],
+                compute_s=[b[4] for b in buffer],
+                comm_s=[b[5] for b in buffer],
+                relays=[-1] * len(buffer),
+                staleness=staleness.tolist(),
+            )
+            if cfg.train and (len(rounds) % cfg.eval_every == 0):
+                rec.accuracy = self._eval(global_params, t_agg)
+                curve.append((len(rounds), t_agg, rec.accuracy))
+            rounds.append(rec)
+            last_agg_t = t_agg
+            buffer = []
+        return SimResult(alg.name, K, len(self.stations), rounds, curve)
+
+

@@ -1,0 +1,84 @@
+"""Round-level records and sweep summaries (the paper's three metrics)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    idx: int
+    t_start: float
+    t_end: float
+    participants: list[int]
+    epochs: list[int]
+    idle_s: list[float]          # per participant, within this round span
+    compute_s: list[float]
+    comm_s: list[float]
+    relays: list[int]
+    staleness: list[int]
+    accuracy: float | None = None
+
+    @property
+    def duration_s(self) -> float:
+        return self.t_end - self.t_start
+
+    @property
+    def mean_idle_frac(self) -> float:
+        d = max(self.duration_s, 1e-9)
+        return float(sum(self.idle_s) / (len(self.idle_s) * d)) if self.idle_s else 0.0
+
+
+@dataclasses.dataclass
+class SimResult:
+    algorithm: str
+    n_sats: int
+    n_stations: int
+    rounds: list[RoundRecord]
+    accuracy_curve: list[tuple[int, float, float]]  # (round, sim time s, acc)
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+    @property
+    def max_accuracy(self) -> float:
+        return max((a for _, _, a in self.accuracy_curve), default=0.0)
+
+    @property
+    def final_accuracy(self) -> float:
+        return self.accuracy_curve[-1][2] if self.accuracy_curve else 0.0
+
+    @property
+    def total_time_s(self) -> float:
+        return self.rounds[-1].t_end if self.rounds else 0.0
+
+    @property
+    def mean_round_duration_s(self) -> float:
+        if not self.rounds:
+            return 0.0
+        return sum(r.duration_s for r in self.rounds) / len(self.rounds)
+
+    @property
+    def mean_idle_per_round_s(self) -> float:
+        vals = [sum(r.idle_s) / max(len(r.idle_s), 1) for r in self.rounds]
+        return sum(vals) / len(vals) if vals else 0.0
+
+    def time_to_accuracy(self, target: float) -> float | None:
+        """Simulation seconds until `target` eval accuracy (None if never)."""
+        for _, t, a in self.accuracy_curve:
+            if a >= target:
+                return t
+        return None
+
+    def summary(self) -> dict:
+        return {
+            "algorithm": self.algorithm,
+            "n_sats": self.n_sats,
+            "n_stations": self.n_stations,
+            "rounds": self.n_rounds,
+            "max_accuracy": round(self.max_accuracy, 4),
+            "final_accuracy": round(self.final_accuracy, 4),
+            "mean_round_duration_h": round(self.mean_round_duration_s / 3600, 3),
+            "mean_idle_per_round_h": round(self.mean_idle_per_round_s / 3600, 3),
+            "total_days": round(self.total_time_s / 86400, 2),
+        }

@@ -1,0 +1,9 @@
+from repro.train.step import (
+    lm_loss,
+    make_train_step,
+    make_prefill_step,
+    make_serve_step,
+)
+
+__all__ = ["lm_loss", "make_train_step", "make_prefill_step",
+           "make_serve_step"]

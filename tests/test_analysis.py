@@ -1,0 +1,61 @@
+"""HLO collective parsing + roofline arithmetic + calibration algebra."""
+import numpy as np
+
+from repro.analysis.calibration import Metrics
+from repro.analysis.collectives import (
+    collective_bytes_by_kind,
+    count_collectives,
+)
+from repro.analysis.roofline import roofline_terms
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+HLO = """
+ENTRY main {
+  %ag = bf16[16,2048]{1,0} all-gather(%x), replica_groups={{0,1}}
+  %ar = (f32[8,8]{1,0}, f32[4]{0}) all-reduce(%a, %b), to_apply=%add
+  %a2a = f32[2,4]{1,0} all-to-all(%y), dimensions={0}
+  %rs = bf16[128]{0} reduce-scatter(%z), dimensions={0}
+  %cp = f32[16]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ags = (bf16[4]{0}, bf16[4]{0}) all-gather-start(%q)
+  %agd = bf16[4]{0} all-gather-done(%ags)
+  %dot = f32[4,4]{1,0} dot(%p, %q)
+}
+"""
+
+
+def test_collective_bytes_parsing():
+    got = collective_bytes_by_kind(HLO)
+    assert got["all-gather"] == 16 * 2048 * 2 + 2 * (4 * 2)  # -start tuple
+    assert got["all-reduce"] == 8 * 8 * 4 + 4 * 4
+    assert got["all-to-all"] == 2 * 4 * 4
+    assert got["reduce-scatter"] == 128 * 2
+    assert got["collective-permute"] == 16 * 4
+
+
+def test_done_ops_not_double_counted():
+    counts = count_collectives(HLO)
+    assert counts["all-gather"] == 2  # ag + ags, not agd
+
+
+def test_roofline_terms_math():
+    r = {"chips": 256, "cost_flops": PEAK_FLOPS_BF16,
+         "cost_bytes": 2 * HBM_BW,
+         "collective_bytes": {"all-reduce": 3 * ICI_BW},
+         "model_flops": PEAK_FLOPS_BF16 * 128}
+    rf = roofline_terms(r)
+    assert rf["compute_s"] == 1.0
+    assert rf["memory_s"] == 2.0
+    assert rf["collective_s"] == 3.0
+    assert rf["dominant"] == "collective"
+    np.testing.assert_allclose(rf["useful_flops_ratio"], 0.5)
+
+
+def test_calibration_metric_algebra():
+    m1 = Metrics(10.0, 100.0, {"all-gather": 5.0})
+    m2 = Metrics(14.0, 120.0, {"all-gather": 7.0, "all-reduce": 1.0})
+    body = m2 - m1
+    total = m1 + body.scaled(3.0)
+    assert total.flops == 10.0 + 3 * 4.0
+    assert total.bytes == 100.0 + 3 * 20.0
+    assert total.coll["all-gather"] == 5.0 + 3 * 2.0
+    assert total.coll["all-reduce"] == 3.0

@@ -1,0 +1,22 @@
+"""Checkpoint round-trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import restore_checkpoint, save_checkpoint
+
+
+def test_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.int32),
+                   "c": [jnp.zeros((2, 2)), jnp.full((3,), 2.5)]},
+        "bf": jnp.asarray([1.5, -2.25], jnp.bfloat16),
+    }
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, tree, step=7)
+    out = restore_checkpoint(path, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))

@@ -1,0 +1,167 @@
+"""Space-ified FL core: aggregation math, selection protocols, timing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    ALGORITHMS,
+    BaseSelector,
+    FedAvgSat,
+    FedBuffSat,
+    FedProxSat,
+    IntraCCSelector,
+    ScheduleSelector,
+    spaceify,
+)
+from repro.core.aggregation import (
+    normalized_weights,
+    weighted_average,
+    weighted_delta_update,
+)
+from repro.core.timing import HardwareModel
+from repro.orbits import WalkerStar, compute_access_windows, station_subnetwork
+
+
+@pytest.fixture(scope="module")
+def access():
+    c = WalkerStar(2, 5)
+    return c, compute_access_windows(c, station_subnetwork(3),
+                                     horizon_s=5 * 86400.0)
+
+
+# ---------------------------------------------------------------- math --
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 5))
+def test_weighted_average_convexity(k, dims):
+    """Aggregate of identical models is the model; weights normalize."""
+    rng = np.random.default_rng(k * 10 + dims)
+    base = {"a": jnp.asarray(rng.normal(size=(dims, 3)), jnp.float32)}
+    stacked = jax.tree.map(lambda x: jnp.stack([x] * k), base)
+    w = jnp.asarray(rng.integers(100, 400, size=k), jnp.float32)
+    out = weighted_average(stacked, w)
+    np.testing.assert_allclose(np.asarray(out["a"]),
+                               np.asarray(base["a"]), rtol=1e-5)
+
+
+def test_weighted_average_matches_eq1():
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(rng.normal(size=(3, 7)), jnp.float32)
+    n = jnp.asarray([200.0, 300.0, 350.0])
+    out = weighted_average({"w": xs}, n)["w"]
+    ref = (n[:, None] / n.sum() * xs).sum(0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+def test_zero_weight_round_keeps_model():
+    xs = {"w": jnp.ones((4, 5))}
+    out = weighted_delta_update({"w": jnp.zeros(5)}, xs,
+                                jnp.zeros(4), jnp.zeros(4, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.0)
+
+
+def test_fedbuff_staleness_discount():
+    g = {"w": jnp.zeros(3)}
+    xs = {"w": jnp.stack([jnp.ones(3), jnp.ones(3)])}
+    fresh = weighted_delta_update(g, xs, jnp.ones(2),
+                                  jnp.asarray([0, 0]))
+    stale = weighted_delta_update(g, xs, jnp.ones(2),
+                                  jnp.asarray([8, 8]))
+    # Normalized weights cancel uniform discounts on the mean, but the
+    # FedBuff admission bound is enforced upstream; mixed staleness tilts
+    # toward the fresh client:
+    mixed = weighted_delta_update(g, {"w": jnp.stack(
+        [jnp.ones(3), 3 * jnp.ones(3)])}, jnp.ones(2),
+        jnp.asarray([0, 8]))
+    assert float(mixed["w"][0]) < 2.0  # fresh (=1) outweighs stale (=3)
+    np.testing.assert_allclose(np.asarray(fresh["w"]), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(stale["w"]), 1.0, rtol=1e-6)
+
+
+def test_strategy_staleness_admission():
+    assert FedBuffSat().staleness_ok(4)
+    assert not FedBuffSat().staleness_ok(5)
+    assert FedAvgSat().staleness_ok(0)
+    assert not FedAvgSat().staleness_ok(1)
+
+
+# ------------------------------------------------------------ selection --
+def test_selection_counts_and_order(access):
+    c, aw = access
+    hw = HardwareModel()
+    for sel in (BaseSelector(), ScheduleSelector(), IntraCCSelector()):
+        plans = sel.select(aw, 0.0, range(c.n_sats), 5, FedAvgSat(), hw,
+                           local_epochs=5)
+        assert len(plans) == 5
+        ks = [p.k for p in plans]
+        assert len(set(ks)) == 5
+        for p in plans:
+            assert p.rx_start >= 0 and p.tx_end > p.rx_start
+            assert p.train_end >= p.train_start
+            assert p.epochs >= 1
+
+
+def test_scheduler_no_worse_than_base(access):
+    """FLSchedule picks fastest-returning clients: the slowest selected
+    return time can only improve vs contact-order selection."""
+    c, aw = access
+    hw = HardwareModel()
+    base = BaseSelector().select(aw, 0.0, range(c.n_sats), 5, FedAvgSat(),
+                                 hw, local_epochs=5)
+    sched = ScheduleSelector().select(aw, 0.0, range(c.n_sats), 5,
+                                      FedAvgSat(), hw, local_epochs=5)
+    assert max(p.tx_end for p in sched) <= max(p.tx_end for p in base) + 1e-6
+
+
+def test_intracc_relay_helps(access):
+    """With relays enabled a satellite's return time never gets worse."""
+    c, aw = access
+    hw = HardwareModel()
+    base = {p.k: p for p in BaseSelector().select(
+        aw, 0.0, range(c.n_sats), c.n_sats, FedAvgSat(), hw, 5)}
+    icc = {p.k: p for p in IntraCCSelector().select(
+        aw, 0.0, range(c.n_sats), c.n_sats, FedAvgSat(), hw, 5)}
+    for k in icc:
+        if k in base:
+            assert icc[k].tx_end <= base[k].tx_end + 1e-6
+
+
+def test_until_contact_trains_through_gap(access):
+    c, aw = access
+    hw = HardwareModel()
+    plans = BaseSelector().select(aw, 0.0, range(c.n_sats), 3,
+                                  FedProxSat(), hw, local_epochs=5)
+    for p in plans:
+        # Algorithm 2: training spans the whole inter-pass gap.
+        assert p.train_end == pytest.approx(p.tx_start)
+        assert p.epochs >= 1
+
+
+def test_return_is_next_pass(access):
+    """Parameters return at a later pass, never the download pass."""
+    c, aw = access
+    hw = HardwareModel()
+    for alg in (FedAvgSat(), FedProxSat()):
+        for p in BaseSelector().select(aw, 0.0, range(c.n_sats), 5, alg,
+                                       hw, 5):
+            w = aw.next_window(p.k, p.rx_start)
+            assert p.tx_start >= w[1], "upload must wait for a later pass"
+
+
+# ------------------------------------------------------------- registry --
+def test_algorithm_suite_is_papers_table1():
+    assert set(ALGORITHMS) == {
+        "fedavg", "fedavg_sched", "fedavg_intracc",
+        "fedprox", "fedprox_sched", "fedprox_sched_v2", "fedprox_intracc",
+        "fedbuff",
+    }
+    assert not ALGORITHMS["fedbuff"].synchronous
+    assert ALGORITHMS["fedprox_sched_v2"].min_epochs == 5
+
+
+def test_spaceify_composition():
+    alg = spaceify(FedProxSat(), schedule=True, intracc=True)
+    assert isinstance(alg.selector, IntraCCSelector)
+    assert alg.selector.schedule

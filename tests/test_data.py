@@ -1,0 +1,58 @@
+"""Federated dataset generator invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import synth_femnist
+from repro.data.femnist import N_CLASSES
+from repro.data.tokens import synthetic_token_batch
+
+
+@settings(max_examples=5, deadline=None)
+@given(n=st.integers(2, 8), seed=st.integers(0, 3))
+def test_femnist_shapes_and_ranges(n, seed):
+    d = synth_femnist(n, seed=seed, min_samples=50, max_samples=80,
+                      eval_samples=16)
+    assert d.x.shape == (n, 80, 28, 28, 1)
+    assert d.x.min() >= 0.0 and d.x.max() <= 1.0
+    assert ((d.n >= 50) & (d.n <= 80)).all()
+    assert ((d.y >= 0) & (d.y < N_CLASSES)).all()
+
+
+def test_femnist_writers_are_non_iid():
+    """Different writers produce different renderings of the same class."""
+    d = synth_femnist(4, seed=0, min_samples=60, max_samples=60,
+                      eval_samples=8)
+    # find one class present for two different writers
+    for c in range(N_CLASSES):
+        owners = [k for k in range(4) if (d.y[k][:d.n[k]] == c).any()]
+        if len(owners) >= 2:
+            a, b = owners[:2]
+            ia = np.argmax(d.y[a][:d.n[a]] == c)
+            ib = np.argmax(d.y[b][:d.n[b]] == c)
+            diff = np.abs(d.x[a, ia] - d.x[b, ib]).mean()
+            assert diff > 0.01, "writer styles must differ"
+            return
+    raise AssertionError("no shared class found")
+
+
+def test_femnist_determinism():
+    d1 = synth_femnist(3, seed=5, min_samples=50, max_samples=50,
+                       eval_samples=8)
+    d2 = synth_femnist(3, seed=5, min_samples=50, max_samples=50,
+                       eval_samples=8)
+    np.testing.assert_array_equal(d1.x, d2.x)
+    np.testing.assert_array_equal(d1.y, d2.y)
+
+
+def test_token_stream_markov_structure():
+    t = synthetic_token_batch(4, 256, 64, seed=0)
+    assert t.shape == (4, 256) and t.min() >= 0 and t.max() < 64
+    # Markov chain: successor entropy must be far below uniform.
+    from collections import Counter
+    pairs = Counter(zip(t[:, :-1].ravel(), t[:, 1:].ravel()))
+    succ = {}
+    for (a, b), n in pairs.items():
+        succ.setdefault(a, Counter())[b] += n
+    top1 = np.mean([max(c.values()) / sum(c.values())
+                    for c in succ.values()])
+    assert top1 > 0.3   # uniform would be ~1/64

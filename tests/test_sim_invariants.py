@@ -1,0 +1,78 @@
+"""Property tests: simulator invariants that must hold for ANY scenario."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ALGORITHMS
+from repro.orbits import WalkerStar, compute_access_windows, station_subnetwork
+from repro.sim import ConstellationSim, SimConfig
+
+_AW_CACHE: dict = {}
+
+
+def _aw(cl, sp, g):
+    key = (cl, sp, g)
+    if key not in _AW_CACHE:
+        c = WalkerStar(cl, sp)
+        _AW_CACHE[key] = compute_access_windows(
+            c, station_subnetwork(g), horizon_s=8 * 86400.0)
+    return _AW_CACHE[key]
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    alg=st.sampled_from(sorted(ALGORITHMS)),
+    cl=st.sampled_from([1, 2]),
+    sp=st.sampled_from([2, 5]),
+    g=st.sampled_from([1, 3]),
+)
+def test_round_invariants(alg, cl, sp, g):
+    c = WalkerStar(cl, sp)
+    cfg = SimConfig(max_rounds=6, horizon_s=8 * 86400.0, train=False)
+    res = ConstellationSim(c, station_subnetwork(g), ALGORITHMS[alg],
+                           cfg=cfg, access=_aw(cl, sp, g)).run()
+    K = c.n_sats
+    prev_end = 0.0
+    for r in res.rounds:
+        # time moves forward and rounds do not overlap
+        assert r.t_start >= prev_end - 1e-6
+        assert r.t_end >= r.t_start
+        prev_end = r.t_end
+        # participants are valid satellites; sync rounds select each
+        # satellite at most once, async buffers may hold repeat uploads
+        # from a fast-revisiting satellite (FedBuff semantics)
+        assert all(0 <= k < K for k in r.participants)
+        if ALGORITHMS[alg].synchronous:
+            assert len(set(r.participants)) == len(r.participants)
+        # the paper's C cap: never more than min(C, K) per round
+        assert len(r.participants) <= min(cfg.clients_per_round, K)
+        # accounting: idle/compute/comm are non-negative and within span
+        span = r.duration_s + 1e-6
+        for idle, comp, comm in zip(r.idle_s, r.compute_s, r.comm_s):
+            assert idle >= -1e-6 and comp >= 0 and comm >= 0
+            assert idle <= span * (1 + 1e-9) + 1.0
+        # relays reference real satellites (or -1)
+        assert all(rl == -1 or 0 <= rl < K for rl in r.relays)
+        # sync algorithms never admit stale updates
+        if ALGORITHMS[alg].synchronous:
+            assert all(s == 0 for s in r.staleness)
+        else:
+            assert all(s <= ALGORITHMS[alg].strategy.max_staleness + 1
+                       for s in r.staleness)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 3))
+def test_determinism(seed):
+    """Same scenario + seed => identical rounds."""
+    c = WalkerStar(1, 3)
+    cfg = SimConfig(max_rounds=4, horizon_s=8 * 86400.0, train=False,
+                    seed=seed)
+    aw = _aw(1, 3, 1)
+    r1 = ConstellationSim(c, station_subnetwork(1), ALGORITHMS["fedavg"],
+                          cfg=cfg, access=aw).run()
+    r2 = ConstellationSim(c, station_subnetwork(1), ALGORITHMS["fedavg"],
+                          cfg=cfg, access=aw).run()
+    assert [r.t_end for r in r1.rounds] == [r.t_end for r in r2.rounds]
+    assert [r.participants for r in r1.rounds] == \
+        [r.participants for r in r2.rounds]
