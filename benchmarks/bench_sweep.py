@@ -4,6 +4,11 @@
 scenarios. Gradient-free (round durations and idle times are orbital
 quantities); the training-accuracy slice of the sweep lives in
 bench_accuracy.py. Emits one row per scenario + aggregate claims.
+
+`--isl` adds the ISL-on dimension: the `*_intracc_isl` variants, whose
+relay hand-offs are routed over real inter-satellite links by
+`repro.comms` (relay hops + comms bytes appear in the derived column).
+`--horizon-days` shrinks the scenario for smoke/CI runs.
 """
 from __future__ import annotations
 
@@ -11,6 +16,7 @@ import argparse
 
 from benchmarks.common import (
     CLUSTERS,
+    HORIZON_S,
     SATS_PER_CLUSTER,
     STATIONS,
     emit,
@@ -20,10 +26,14 @@ from benchmarks.common import (
 ALG_SUITE = ("fedavg", "fedavg_sched", "fedavg_intracc",
              "fedprox", "fedprox_sched", "fedprox_sched_v2",
              "fedprox_intracc", "fedbuff")
+ISL_SUITE = ("fedavg_intracc_isl", "fedprox_intracc_isl")
 
 
-def run(rounds: int = 20, quick: bool = False):
+def run(rounds: int = 20, quick: bool = False, isl: bool = False,
+        horizon_s: float = HORIZON_S):
     algs = ALG_SUITE[:4] if quick else ALG_SUITE
+    if isl:
+        algs = algs + ISL_SUITE
     clusters = (2, 10) if quick else CLUSTERS
     sats = (2, 10) if quick else SATS_PER_CLUSTER
     stations = (1, 13) if quick else STATIONS
@@ -38,11 +48,17 @@ def run(rounds: int = 20, quick: bool = False):
                         rows.append((f"sweep/{alg}/c{cl}s{sp}/g{g}",
                                      0, "skip:K<2"))
                         continue
-                    res = run_scenario(alg, cl, sp, g, rounds=rounds)
+                    res = run_scenario(alg, cl, sp, g, rounds=rounds,
+                                       horizon_s=horizon_s)
+                    derived = round(res.mean_idle_per_round_s / 3600, 3)
+                    if alg.endswith("_isl"):
+                        derived = (f"idle_h={derived};"
+                                   f"hops={res.total_relay_hops};"
+                                   f"mb={round(res.total_comms_bytes / 1e6, 2)}")
                     rows.append((
                         f"sweep/{alg}/c{cl}s{sp}/g{g}",
                         round(res.mean_round_duration_s / 3600, 3),
-                        round(res.mean_idle_per_round_s / 3600, 3)))
+                        derived))
                     n_run += 1
     rows.append(("sweep/scenarios_run", n_run, f"skipped={n_skip}"))
     return rows
@@ -52,8 +68,15 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--isl", action="store_true",
+                    help="add the ISL-enabled *_intracc_isl variants")
+    ap.add_argument("--horizon-days", type=float, default=None,
+                    help="override the 90-day scenario (smoke/CI runs)")
     args = ap.parse_args(argv)
-    emit(run(rounds=args.rounds, quick=args.quick))
+    horizon_s = (args.horizon_days * 86400.0 if args.horizon_days
+                 else HORIZON_S)
+    emit(run(rounds=args.rounds, quick=args.quick, isl=args.isl,
+             horizon_s=horizon_s))
 
 
 if __name__ == "__main__":

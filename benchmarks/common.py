@@ -15,6 +15,11 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.comms import (                                           # noqa: E402
+    ConstantRate,
+    build_contact_plan,
+    compute_isl_windows,
+)
 from repro.core import ALGORITHMS                                   # noqa: E402
 from repro.data import synth_femnist                                # noqa: E402
 from repro.orbits import (                                          # noqa: E402
@@ -57,6 +62,32 @@ def access(clusters: int, sats: int, n_stations: int,
     return access_full(clusters, sats, horizon_s).subset(n_stations)
 
 
+@functools.lru_cache(maxsize=32)
+def isl_windows(clusters: int, sats: int, horizon_s: float = HORIZON_S):
+    """ISL contact windows for one constellation, disk-cached (they are
+    station-independent, so one computation serves all six networks)."""
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR,
+                        f"isl_{clusters}x{sats}_{int(horizon_s)}.pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    iw = compute_isl_windows(WalkerStar(clusters, sats), horizon_s=horizon_s)
+    with open(path, "wb") as f:
+        pickle.dump(iw, f)
+    return iw
+
+
+@functools.lru_cache(maxsize=256)
+def contact_plan(clusters: int, sats: int, n_stations: int,
+                 horizon_s: float = HORIZON_S):
+    """ConstantRate ContactPlan (ground + ISL) for one scenario."""
+    return build_contact_plan(
+        access(clusters, sats, n_stations, horizon_s),
+        isl_windows(clusters, sats, horizon_s),
+        ConstantRate())
+
+
 _DATA_CACHE: dict = {}
 
 
@@ -72,12 +103,15 @@ def run_scenario(alg: str, clusters: int, sats: int, n_stations: int,
                  eval_every: int = 10, horizon_s: float = HORIZON_S):
     c = WalkerStar(clusters, sats)
     aw = access(clusters, sats, n_stations, horizon_s)
+    algorithm = ALGORITHMS[alg]
+    plan = (contact_plan(clusters, sats, n_stations, horizon_s)
+            if algorithm.isl else None)
     cfg = SimConfig(max_rounds=rounds, horizon_s=horizon_s, train=train,
                     eval_every=eval_every, seed=seed)
     sim = ConstellationSim(
-        c, station_subnetwork(n_stations), ALGORITHMS[alg],
+        c, station_subnetwork(n_stations), algorithm,
         data=data_for(c.n_sats, seed) if train else None,
-        cfg=cfg, access=aw)
+        cfg=cfg, access=aw, contact_plan=plan)
     return sim.run()
 
 

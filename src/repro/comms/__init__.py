@@ -1,0 +1,49 @@
+"""Inter-satellite communications subsystem.
+
+Turns the seed's free, instantaneous relay hand-off into a physical
+communications layer, in four pieces:
+
+  * `links`        — link-rate models: `ConstantRate` (seed back-compat)
+                     and `LinkBudget` (FSPL + Shannon rate vs slant range);
+  * `isl`          — ISL topology for Walker-Star (intra-plane ring +
+                     optional cross-plane) and chunked-JAX per-edge
+                     contact-window extraction;
+  * `contact_plan` — ground passes + ISL windows compiled into one
+                     rate-annotated, queryable `ContactPlan`;
+  * `routing`      — store-and-forward earliest-arrival (contact-graph
+                     style) routing with bounded hops.
+
+`repro.core.selection` plans relayed uploads against a `ContactPlan`, and
+`repro.core.spaceify(..., isl=True)` exposes the ISL-enabled algorithm
+variants (`*_isl`) that `repro.sim.engine` executes.
+"""
+from repro.comms.contact_plan import (
+    ContactPlan,
+    ContactWindow,
+    build_contact_plan,
+)
+from repro.comms.isl import (
+    DEFAULT_ISL_MAX_RANGE_KM,
+    ISLTopology,
+    ISLWindows,
+    compute_isl_windows,
+    isl_visibility_grid,
+)
+from repro.comms.links import ConstantRate, LinkBudget, LinkModel
+from repro.comms.routing import Route, earliest_arrival
+
+__all__ = [
+    "ConstantRate",
+    "LinkBudget",
+    "LinkModel",
+    "ISLTopology",
+    "ISLWindows",
+    "DEFAULT_ISL_MAX_RANGE_KM",
+    "compute_isl_windows",
+    "isl_visibility_grid",
+    "ContactPlan",
+    "ContactWindow",
+    "build_contact_plan",
+    "Route",
+    "earliest_arrival",
+]

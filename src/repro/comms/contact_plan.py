@@ -1,0 +1,250 @@
+"""Unified contact plan: ground passes + ISL windows, priced by link rate.
+
+A `ContactPlan` compiles the orbital geometry into the one structure the
+selector/routing layers query:
+
+  * ground edges  `("gs", k)`      — satellite k to *any* ground station,
+    from `AccessWindows`;
+  * ISL edges     `("isl", i, j)`  — undirected inter-satellite links from
+    `ISLWindows` (stored with i < j).
+
+Each window carries an achievable `rate_bps` so transfer time varies with
+geometry. With the default `ConstantRate` link models the plan reproduces
+the seed's constant-`LINK_MBPS` arithmetic exactly (back-compat).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+
+import numpy as np
+
+from repro.comms.isl import ISLWindows
+from repro.comms.links import ConstantRate, LinkModel, slant_range_m
+from repro.orbits.access import AccessWindows
+from repro.orbits.propagation import eci_positions, gs_eci_positions
+from repro.orbits.stations import station_latlon
+
+Edge = tuple  # ("gs", k) | ("isl", i, j) with i < j
+
+
+@dataclasses.dataclass(frozen=True)
+class ContactWindow:
+    start: float
+    end: float
+    rate_bps: float
+
+    @property
+    def duration_s(self) -> float:
+        return self.end - self.start
+
+    @property
+    def volume_bytes(self) -> float:
+        """Bytes transferable if the whole window is used at `rate_bps`."""
+        return self.duration_s * self.rate_bps / 8.0
+
+
+@dataclasses.dataclass
+class _EdgeWindows:
+    """Start-sorted parallel arrays for one edge.
+
+    Windows from different stations may overlap, so `ends` is not
+    necessarily sorted; queries bisect `cummax_ends` (running max of
+    `ends`, always non-decreasing) to find the first index whose window
+    outlives t.
+    """
+
+    starts: np.ndarray
+    ends: np.ndarray
+    rates: np.ndarray
+    cummax_ends: np.ndarray = dataclasses.field(init=False)
+
+    def __post_init__(self):
+        self.cummax_ends = (np.maximum.accumulate(self.ends)
+                            if len(self.ends) else self.ends)
+
+    def __len__(self) -> int:
+        return len(self.starts)
+
+    def first_live(self, t: float) -> int:
+        """Index of the first (start-sorted) window with end > t: where
+        the running max of `ends` first exceeds t, the max was raised by
+        that very window, and every earlier window has already closed."""
+        return bisect.bisect_right(self.cummax_ends, t)
+
+
+@dataclasses.dataclass
+class ContactPlan:
+    """Queryable comms timeline for one (constellation, network) scenario."""
+
+    n_sats: int
+    ground: list[_EdgeWindows]                       # per satellite
+    isl: dict[tuple[int, int], _EdgeWindows]         # key (i, j), i < j
+    neighbors: dict[int, list[int]]
+    horizon_s: float
+
+    # ------------------------------------------------------------- query --
+    def _edge_windows(self, edge: Edge) -> _EdgeWindows:
+        if edge[0] == "gs":
+            return self.ground[edge[1]]
+        i, j = sorted(edge[1:3])
+        return self.isl[(i, j)]
+
+    def next_window(self, edge: Edge, t: float) -> ContactWindow | None:
+        """Earliest window on `edge` active at or after t (truncated to t),
+        mirroring `AccessWindows.next_window` semantics. With overlapping
+        windows this is the one with the smallest usable instant
+        (start-sorted ties broken by position)."""
+        ew = self._edge_windows(edge)
+        i = ew.first_live(t)
+        if i >= len(ew):
+            return None
+        return ContactWindow(start=max(float(ew.starts[i]), t),
+                             end=float(ew.ends[i]),
+                             rate_bps=float(ew.rates[i]))
+
+    def next_ground_upload(self, k: int, t: float, n_bytes: float
+                           ) -> tuple[float, float] | None:
+        """Earliest-*completion* ground upload of `n_bytes` from sat k.
+
+        Returns (tx_start, tx_end). Like the seed, the upload is not
+        required to fit inside the window (tx times are ms against
+        minute-scale passes); with constant rates the result is therefore
+        identical to `next_window(k, t)` + the constant transfer time.
+        """
+        ew = self.ground[k]
+        i = ew.first_live(t)
+        best: tuple[float, float] | None = None
+        while i < len(ew):
+            if float(ew.ends[i]) <= t:  # closed overlap from another station
+                i += 1
+                continue
+            s = float(ew.starts[i])
+            if best is not None and s >= best[1]:
+                break  # no later window can complete earlier
+            tx_start = max(s, t)
+            tx_end = tx_start + n_bytes * 8 / float(ew.rates[i])
+            if best is None or tx_end < best[1]:
+                best = (tx_start, tx_end)
+            i += 1
+        return best
+
+    def next_isl_transfer(self, i: int, j: int, t: float, n_bytes: float
+                          ) -> tuple[float, float] | None:
+        """Earliest ISL transfer of `n_bytes` over edge (i, j) starting at
+        or after t. The transfer must fit inside a contact window (ISL
+        contacts can be short); returns (start, end)."""
+        key = (min(i, j), max(i, j))
+        ew = self.isl.get(key)
+        if ew is None or len(ew) == 0:
+            return None
+        w = ew.first_live(t)
+        while w < len(ew):
+            if float(ew.ends[w]) <= t:
+                w += 1
+                continue
+            s = max(float(ew.starts[w]), t)
+            e = s + n_bytes * 8 / float(ew.rates[w])
+            if e <= float(ew.ends[w]):
+                return (s, e)
+            w += 1
+        return None
+
+    def isl_edges_of(self, k: int) -> list[int]:
+        return self.neighbors.get(k, [])
+
+
+# ---------------------------------------------------------------- build --
+def _midpoint_rates(link: LinkModel, ranges_m: np.ndarray) -> np.ndarray:
+    return np.asarray(link.rate_bps(ranges_m), dtype=float).reshape(-1)
+
+
+def _elements_of(elements: dict, ks) -> dict:
+    """Slice per-satellite orbital elements so `eci_positions` propagates
+    only the satellites named in `ks` (not the whole constellation)."""
+    return {"raan": np.asarray(elements["raan"])[ks],
+            "anomaly0": np.asarray(elements["anomaly0"])[ks],
+            "a": elements["a"], "inc": elements["inc"]}
+
+
+def build_contact_plan(
+    aw: AccessWindows,
+    isl_windows: ISLWindows | None = None,
+    ground_link: LinkModel | None = None,
+    isl_link: LinkModel | None = None,
+    constellation=None,
+    stations=None,
+) -> ContactPlan:
+    """Compile access + ISL windows into a rate-annotated `ContactPlan`.
+
+    Geometry-free (`ConstantRate`) links skip propagation entirely; a
+    `LinkBudget` prices each window by the slant range at its midpoint,
+    which requires `constellation` (and `stations` for ground edges).
+    """
+    ground_link = ground_link or ConstantRate()
+    isl_link = isl_link or ground_link
+    K = aw.n_sats
+
+    ground: list[_EdgeWindows] = []
+    if ground_link.geometry_free:
+        rate = float(ground_link.rate_bps())
+        for k in range(K):
+            s, e = aw.per_sat[k]
+            ground.append(_EdgeWindows(np.asarray(s, float),
+                                       np.asarray(e, float),
+                                       np.full(len(s), rate)))
+    else:
+        if constellation is None or stations is None:
+            raise ValueError("geometry-dependent ground link needs "
+                             "constellation + stations for slant ranges")
+        elements = constellation.elements()
+        lat, lon = station_latlon(stations)
+        for k in range(K):
+            starts, ends, gidx = [], [], []
+            for g, (s_arr, e_arr) in enumerate(aw.per_sat_station[k]):
+                starts.extend(map(float, s_arr))
+                ends.extend(map(float, e_arr))
+                gidx.extend([g] * len(s_arr))
+            if not starts:
+                ground.append(_EdgeWindows(np.empty(0), np.empty(0),
+                                           np.empty(0)))
+                continue
+            starts = np.asarray(starts, float)
+            ends = np.asarray(ends, float)
+            gidx = np.asarray(gidx)
+            mids = (starts + ends) / 2.0
+            # One per-satellite propagation prices every window midpoint.
+            sat = np.asarray(eci_positions(_elements_of(elements, [k]),
+                                           mids))[0]             # (M, 3)
+            gs = np.asarray(gs_eci_positions(lat, lon, mids))     # (G, M, 3)
+            rng = slant_range_m(sat, gs[gidx, np.arange(len(mids))])
+            rates = _midpoint_rates(ground_link, rng)
+            order = np.argsort(starts, kind="stable")
+            ground.append(_EdgeWindows(starts[order], ends[order],
+                                       rates[order]))
+
+    isl: dict[tuple[int, int], _EdgeWindows] = {}
+    neighbors: dict[int, list[int]] = {}
+    if isl_windows is not None and isl_windows.n_edges:
+        elements = (constellation.elements()
+                    if constellation is not None and
+                    not isl_link.geometry_free else None)
+        for (i, j), (s_arr, e_arr) in zip(isl_windows.edges,
+                                          isl_windows.per_edge):
+            if len(s_arr) == 0:
+                continue
+            if isl_link.geometry_free or elements is None:
+                rates = np.full(len(s_arr), float(isl_link.rate_bps()))
+            else:
+                mids = (np.asarray(s_arr) + np.asarray(e_arr)) / 2.0
+                pos = np.asarray(eci_positions(
+                    _elements_of(elements, [i, j]), mids))       # (2, M, 3)
+                rng = slant_range_m(pos[0], pos[1])
+                rates = _midpoint_rates(isl_link, rng)
+            isl[(i, j)] = _EdgeWindows(np.asarray(s_arr, float),
+                                       np.asarray(e_arr, float), rates)
+            neighbors.setdefault(i, []).append(j)
+            neighbors.setdefault(j, []).append(i)
+
+    return ContactPlan(n_sats=K, ground=ground, isl=isl,
+                       neighbors=neighbors, horizon_s=aw.horizon_s)

@@ -1,0 +1,95 @@
+"""Store-and-forward earliest-arrival routing over a `ContactPlan`.
+
+Contact-graph-routing (CGR) style: a parameter update sitting on satellite
+`src` at `t_ready` may either wait for its own next ground pass or hop over
+ISL edges (paying each hop's transfer time plus any wait for the edge's
+next contact window) to a peer with an earlier pass — recursively, up to
+`max_hops` ISL legs. Dijkstra over (satellite, arrival-time) labels finds
+the route whose *server arrival* is earliest; the original satellite keeps
+priority on ties (a relay must strictly beat the direct upload).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+from repro.comms.contact_plan import ContactPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class Route:
+    """One routed parameter return.
+
+    path: satellite ids, source first; path[-1] performs the ground upload.
+    departure_s: when the first transmission leaves the source (the source
+      trains until this instant in UNTIL_CONTACT regimes).
+    tx_start / arrival_s: final ground upload start / server receive time.
+    isl_hops: number of ISL legs (0 == direct upload).
+    bytes_on_wire: total bytes transmitted across all legs.
+    """
+
+    path: tuple[int, ...]
+    departure_s: float
+    tx_start: float
+    arrival_s: float
+    isl_hops: int
+    bytes_on_wire: float
+
+    @property
+    def relay(self) -> int:
+        """The uplinking peer in seed vocabulary (-1: no relay)."""
+        return self.path[-1] if len(self.path) > 1 else -1
+
+
+def earliest_arrival(plan: ContactPlan, src: int, t_ready: float,
+                     n_bytes: float, max_hops: int = 3) -> Route | None:
+    """Earliest-arrival route for `n_bytes` from `src` at `t_ready`.
+
+    Returns None when no ground pass exists within the plan's horizon.
+    With no ISL edges this degenerates to the direct upload.
+    """
+    # Dijkstra labels: (data-available time, hops, seq, sat, path,
+    # first-leg start); `seq` breaks ordering ties before the
+    # non-comparable payload fields. Labels are pruned per (sat, hops) —
+    # not per sat — because a later-arriving low-hop label can still
+    # extend further within the hop budget than an earlier high-hop one.
+    heap: list = [(t_ready, 0, 0, src, (src,), None)]
+    seq = 1
+    best_at: dict[tuple[int, int], float] = {(src, 0): t_ready}
+    best: Route | None = None
+
+    while heap:
+        t, hops, _, k, path, first_leg = heapq.heappop(heap)
+        if best is not None and t >= best.arrival_s:
+            break  # data cannot arrive before an already-complete route
+        # Option A: upload to ground from here.
+        up = plan.next_ground_upload(k, t, n_bytes)
+        if up is not None:
+            tx_start, tx_end = up
+            departure = first_leg if first_leg is not None else tx_start
+            cand = Route(path=path, departure_s=departure, tx_start=tx_start,
+                         arrival_s=tx_end, isl_hops=hops,
+                         bytes_on_wire=n_bytes * (hops + 1))
+            # Strict improvement only: the source keeps priority on ties.
+            if best is None or cand.arrival_s < best.arrival_s:
+                best = cand
+        # Option B: hop to a neighbour over the next ISL window.
+        if hops >= max_hops:
+            continue
+        for j in plan.isl_edges_of(k):
+            if j in path:
+                continue
+            leg = plan.next_isl_transfer(k, j, t, n_bytes)
+            if leg is None:
+                continue
+            s, e = leg
+            # Dominated iff some label reaches j no later with no more hops.
+            if any(best_at.get((j, h), float("inf")) <= e
+                   for h in range(hops + 2)):
+                continue
+            best_at[(j, hops + 1)] = e
+            heapq.heappush(heap, (e, hops + 1, seq, j, path + (j,),
+                                  first_leg if first_leg is not None
+                                  else s))
+            seq += 1
+    return best

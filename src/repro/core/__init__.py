@@ -22,7 +22,12 @@ from repro.core.selection import (
     IntraCCSelector,
     ClientPlan,
 )
-from repro.core.spaceify import SpaceifiedAlgorithm, spaceify, ALGORITHMS
+from repro.core.spaceify import (
+    ALGORITHMS,
+    TABLE1_ALGORITHMS,
+    SpaceifiedAlgorithm,
+    spaceify,
+)
 
 __all__ = [
     "Strategy",
@@ -37,4 +42,5 @@ __all__ = [
     "SpaceifiedAlgorithm",
     "spaceify",
     "ALGORITHMS",
+    "TABLE1_ALGORITHMS",
 ]

@@ -16,6 +16,14 @@ one satellite's participation in one FL round:
 
 All selectors are pure host-side planning over precomputed `AccessWindows`;
 the tensor math happens later in `repro.sim.engine`.
+
+When a `repro.comms.ContactPlan` is supplied, itineraries are planned
+against it instead: transfer times follow each window's achievable rate,
+and — for relay-enabled selectors — the parameter return is routed
+store-and-forward over the ISL contact graph (`repro.comms.routing`), so a
+relayed upload pays real ISL transfer time + wait and multi-hop relays
+become possible. Without a plan the seed's free-relay behaviour is
+reproduced exactly (back-compat).
 """
 from __future__ import annotations
 
@@ -24,6 +32,8 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.comms.contact_plan import ContactPlan
+from repro.comms.routing import earliest_arrival
 from repro.core.strategies.base import ClientWorkMode, Strategy
 from repro.core.timing import HardwareModel
 from repro.orbits.access import AccessWindows
@@ -41,7 +51,10 @@ class ClientPlan:
     epochs: int
     tx_start: float          # parameter return begins
     tx_end: float            #   ... ends (server receives the update)
-    relay: int = -1          # peer satellite relaying the return (-1: none)
+    relay: int = -1          # peer satellite uplinking the return (-1: none)
+    relay_path: tuple[int, ...] = ()   # full store-and-forward path (k, ...)
+    isl_hops: int = 0        # ISL legs paid for the return (0: direct/free)
+    comm_bytes: float = 0.0  # bytes on the wire: download + every return leg
 
     @property
     def round_trip(self) -> float:
@@ -57,25 +70,43 @@ def _plan_for(
     local_epochs: int,
     min_epochs: int,
     use_relay: bool,
+    plan: ContactPlan | None = None,
+    max_hops: int = 3,
 ) -> ClientPlan | None:
     """Build the itinerary for one candidate satellite starting at time t."""
-    w = aw.next_window(k, t)
-    if w is None:
-        return None
-    rx_start = w[0]
-    rx_end = rx_start + hw.tx_time_s
-    if rx_end > w[1]:  # download does not fit: slide into the next pass
-        w2 = aw.next_window(k, w[1] + 1.0)
-        if w2 is None:
+    # --- download pass ---------------------------------------------------
+    if plan is not None:
+        w0 = plan.next_window(("gs", k), t)
+        if w0 is None:
             return None
-        w = w2
-        rx_start, rx_end = w2[0], w2[0] + hw.tx_time_s
+        rx_start = w0.start
+        rx_end = rx_start + hw.tx_time_for(rate_bps=w0.rate_bps)
+        if rx_end > w0.end:  # download does not fit: slide into next pass
+            w0 = plan.next_window(("gs", k), w0.end + 1.0)
+            if w0 is None:
+                return None
+            rx_start = w0.start
+            rx_end = rx_start + hw.tx_time_for(rate_bps=w0.rate_bps)
+        pass_end = w0.end
+    else:
+        w = aw.next_window(k, t)
+        if w is None:
+            return None
+        rx_start = w[0]
+        rx_end = rx_start + hw.tx_time_s
+        if rx_end > w[1]:  # download does not fit: slide into the next pass
+            w2 = aw.next_window(k, w[1] + 1.0)
+            if w2 is None:
+                return None
+            w = w2
+            rx_start, rx_end = w2[0], w2[0] + hw.tx_time_s
+        pass_end = w[1]
     train_start = rx_end
     # Training happens *between* passes; parameters return at a subsequent
     # pass ("Wait until reach nearest station in G, then return w" /
     # "while no access to ground station do train") — never the download
     # pass itself.
-    after_pass = w[1] + 1.0
+    after_pass = pass_end + 1.0
 
     if strategy.work_mode is ClientWorkMode.FIXED_EPOCHS:
         train_end = train_start + local_epochs * hw.epoch_time_s
@@ -90,35 +121,54 @@ def _plan_for(
         epochs = 0
 
     # --- choose the return path -----------------------------------------
-    ret = aw.next_window(k, earliest_return)
     relay = -1
-    if use_relay:
-        # Any same-cluster peer with line-of-sight along the orbital plane
-        # may relay the update; the original satellite has priority on ties.
-        cl = int(aw.cluster[k])
-        best = aw.cluster_next_window(cl, earliest_return)
-        if best is not None and (ret is None or best[1] < ret[0]):
-            peer, s, e = best
-            if peer != k:
-                relay = peer
-            ret = (s, e)
-    if ret is None:
-        return None
-    tx_start = ret[0]
-    tx_end = tx_start + hw.tx_time_s
+    relay_path: tuple[int, ...] = ()
+    isl_hops = 0
+    comm_bytes = 2.0 * hw.model_bytes
+    if plan is not None:
+        # Contact-graph routing: relayed uploads pay ISL transfer + wait.
+        route = earliest_arrival(plan, k, earliest_return, hw.model_bytes,
+                                 max_hops=max_hops if use_relay else 0)
+        if route is None:
+            return None
+        tx_start, tx_end = route.tx_start, route.arrival_s
+        departure = route.departure_s
+        relay, relay_path, isl_hops = route.relay, route.path, route.isl_hops
+        comm_bytes = hw.model_bytes + route.bytes_on_wire
+    else:
+        ret = aw.next_window(k, earliest_return)
+        if use_relay:
+            # Seed free-relay: any same-cluster peer with line-of-sight along
+            # the orbital plane may relay the update instantaneously; the
+            # original satellite has priority on ties.
+            cl = int(aw.cluster[k])
+            best = aw.cluster_next_window(cl, earliest_return)
+            if best is not None and (ret is None or best[1] < ret[0]):
+                peer, s, e = best
+                if peer != k:
+                    relay = peer
+                    relay_path = (k, peer)
+                ret = (s, e)
+        if ret is None:
+            return None
+        tx_start = ret[0]
+        tx_end = tx_start + hw.tx_time_s
+        departure = tx_start
     if strategy.work_mode is ClientWorkMode.UNTIL_CONTACT:
         # SGD realism: the *number of gradient epochs* is capped by the
         # onboard duty cycle; but per Algorithms 2-3 the satellite keeps
-        # training right up to the return pass, so its compute span is the
-        # whole inter-pass gap (this is what makes FedProx/FedBuff idle
-        # times collapse in Figures 9b-c).
-        epochs = hw.epochs_between(train_start, tx_start)
+        # training right up to its first return transmission (the return
+        # pass in the direct case, the first ISL leg when routed), so its
+        # compute span is the whole inter-pass gap (this is what makes
+        # FedProx/FedBuff idle times collapse in Figures 9b-c).
+        epochs = hw.epochs_between(train_start, departure)
         epochs = max(epochs, min(min_epochs, hw.max_local_epochs)) or 1
-        train_end = tx_start
+        train_end = departure
     return ClientPlan(
         k=k, rx_start=rx_start, rx_end=rx_end,
         train_start=train_start, train_end=float(train_end),
         epochs=int(epochs), tx_start=tx_start, tx_end=tx_end, relay=relay,
+        relay_path=relay_path, isl_hops=isl_hops, comm_bytes=comm_bytes,
     )
 
 
@@ -128,6 +178,7 @@ class BaseSelector:
 
     use_relay: bool = False
     schedule: bool = False
+    max_hops: int = 3        # ISL hop bound when routing over a ContactPlan
 
     def select(
         self,
@@ -139,11 +190,13 @@ class BaseSelector:
         hw: HardwareModel,
         local_epochs: int = 5,
         min_epochs: int = 0,
+        plan: ContactPlan | None = None,
     ) -> list[ClientPlan]:
         plans = []
         for k in idle:
             p = _plan_for(int(k), t, aw, strategy, hw, local_epochs,
-                          min_epochs, self.use_relay)
+                          min_epochs, self.use_relay, plan=plan,
+                          max_hops=self.max_hops)
             if p is not None:
                 plans.append(p)
         # Base rule: order by *initial contact* (first to reach a station).

@@ -6,7 +6,12 @@ This is the paper's headline API. A `SpaceifiedAlgorithm` bundles
   knobs     (local epochs E, min-epoch floor, buffer size D)
 and is what `repro.sim.engine.ConstellationSim` executes.
 
-`ALGORITHMS` registers the paper's full Table-1 suite (8 variants).
+`ALGORITHMS` registers the paper's full Table-1 suite (8 variants) plus
+the ISL-enabled extensions (`*_isl`): passing `isl=True` marks the
+algorithm as planning against a `repro.comms.ContactPlan`, so relayed
+parameter returns are routed store-and-forward over real inter-satellite
+links (paying transfer time + contact wait) instead of the seed's free
+instantaneous hand-off. `TABLE1_ALGORITHMS` is the paper-exact subset.
 """
 from __future__ import annotations
 
@@ -27,6 +32,7 @@ class SpaceifiedAlgorithm:
     local_epochs: int = 5      # E (FIXED_EPOCHS regime)
     min_epochs: int = 0        # SchedV2 floor (UNTIL_CONTACT regime)
     buffer_frac: float = 1.0   # FedBuff: D = max(1, round(buffer_frac * c))
+    isl: bool = False          # plan against an ISL-aware ContactPlan
 
     @property
     def synchronous(self) -> bool:
@@ -34,19 +40,28 @@ class SpaceifiedAlgorithm:
 
 
 def spaceify(strategy: Strategy, *, schedule: bool = False,
-             intracc: bool = False, min_epochs: int = 0,
+             intracc: bool = False, isl: bool = False, min_epochs: int = 0,
              local_epochs: int = 5, name: str | None = None,
-             buffer_frac: float = 1.0) -> SpaceifiedAlgorithm:
-    """Adapt any terrestrial `Strategy` for orbital deployment."""
+             buffer_frac: float = 1.0,
+             max_hops: int = 3) -> SpaceifiedAlgorithm:
+    """Adapt any terrestrial `Strategy` for orbital deployment.
+
+    `isl=True` makes the simulator compile a `ContactPlan` (ground passes
+    + ISL contact windows) and plan itineraries against it: transfer times
+    follow per-window achievable rates and relays become real (bounded at
+    `max_hops` store-and-forward legs).
+    """
     if intracc:
-        selector = IntraCCSelector(schedule=schedule)
+        selector = IntraCCSelector(schedule=schedule, max_hops=max_hops)
     elif schedule:
-        selector = ScheduleSelector()
+        selector = ScheduleSelector(max_hops=max_hops)
     else:
-        selector = BaseSelector()
+        selector = BaseSelector(max_hops=max_hops)
     suffix = ("_sched" if schedule else "") + ("_intracc" if intracc else "")
     if min_epochs:
         suffix += "_v2"
+    if isl:
+        suffix += "_isl"
     return SpaceifiedAlgorithm(
         name=name or strategy.name + suffix,
         strategy=strategy,
@@ -54,11 +69,12 @@ def spaceify(strategy: Strategy, *, schedule: bool = False,
         local_epochs=local_epochs,
         min_epochs=min_epochs,
         buffer_frac=buffer_frac,
+        isl=isl,
     )
 
 
 def _suite() -> dict[str, SpaceifiedAlgorithm]:
-    """The paper's Table-1 algorithm suite."""
+    """The paper's Table-1 suite + ISL-enabled extensions."""
     fedavg, fedprox, fedbuff = FedAvgSat(), FedProxSat(), FedBuffSat()
     algs = [
         spaceify(fedavg),
@@ -69,8 +85,16 @@ def _suite() -> dict[str, SpaceifiedAlgorithm]:
         spaceify(fedprox, schedule=True, min_epochs=5),   # FedProxSchedV2
         spaceify(fedprox, intracc=True),
         spaceify(fedbuff),
+        # ISL extensions: the relay hand-off priced by the comms subsystem.
+        spaceify(fedavg, intracc=True, isl=True),
+        spaceify(fedprox, intracc=True, isl=True),
     ]
     return {a.name: a for a in algs}
 
 
 ALGORITHMS: dict[str, SpaceifiedAlgorithm] = _suite()
+
+# The paper-exact Table-1 subset (no ISL extensions).
+TABLE1_ALGORITHMS: dict[str, SpaceifiedAlgorithm] = {
+    n: a for n, a in ALGORITHMS.items() if not a.isl
+}

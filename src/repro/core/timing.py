@@ -34,6 +34,17 @@ class HardwareModel:
         """One model transfer (either direction) over the telemetry link."""
         return (self.model_bytes * 8) / (self.link_mbps * 1e6)
 
+    def tx_time_for(self, n_bytes: float | None = None,
+                    rate_bps: float | None = None) -> float:
+        """Transfer time for `n_bytes` at `rate_bps` (rate/bytes-aware
+        variant of `tx_time_s`; both default to the model's constants, so
+        `tx_time_for()` == `tx_time_s` bit for bit)."""
+        if n_bytes is None:
+            n_bytes = self.model_bytes
+        if rate_bps is None:
+            rate_bps = self.link_mbps * 1e6
+        return (n_bytes * 8) / rate_bps
+
     def epochs_between(self, t0: float, t1: float, *, cap: bool = True) -> int:
         """How many whole local epochs fit in [t0, t1)."""
         n = int(max(0.0, t1 - t0) / self.epoch_time_s)

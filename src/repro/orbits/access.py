@@ -34,17 +34,6 @@ def visibility_grid(elements: dict, lat: jax.Array, lon: jax.Array,
     return elevation_deg(sat, gs) >= mask_deg
 
 
-def _bools_to_intervals(vis: np.ndarray, t0: float, dt: float
-                        ) -> list[tuple[float, float]]:
-    """Convert a 1-D boolean track to [(start, end)] intervals."""
-    if not vis.any():
-        return []
-    padded = np.concatenate([[False], vis, [False]])
-    edges = np.flatnonzero(padded[1:] != padded[:-1])
-    starts, ends = edges[0::2], edges[1::2]
-    return [(t0 + s * dt, t0 + e * dt) for s, e in zip(starts, ends)]
-
-
 def _merge_intervals(intervals: list[tuple[float, float]]
                      ) -> list[tuple[float, float]]:
     if not intervals:

@@ -1,7 +1,11 @@
 """ConstellationSim — event-driven execution of a space-ified FL algorithm.
 
-Couples three layers:
+Couples four layers:
   * orbital geometry  (`repro.orbits`)     — who can talk to whom, when;
+  * communications    (`repro.comms`)      — link rates, ISL contact
+                                             windows, relay routing (built
+                                             only for `isl=True` algorithms
+                                             or explicit link models);
   * the FL algorithm  (`repro.core`)       — selection + client regime +
                                              aggregation;
   * real gradients    (`repro.core.client`)— vmapped on-board SGD on the
@@ -21,6 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comms.contact_plan import ContactPlan, build_contact_plan
+from repro.comms.isl import ISLTopology, compute_isl_windows
+from repro.comms.links import ConstantRate, LinkModel
 from repro.core.client import evaluate, make_client_update
 from repro.core.spaceify import SpaceifiedAlgorithm
 from repro.core.strategies.base import ClientWorkMode
@@ -57,6 +64,10 @@ class ConstellationSim:
         hw: HardwareModel | None = None,
         cfg: SimConfig | None = None,
         access: AccessWindows | None = None,
+        contact_plan: ContactPlan | None = None,
+        link_model: LinkModel | None = None,
+        isl_link: LinkModel | None = None,
+        isl_topology: ISLTopology | None = None,
         apply_fn=femnist_mlp_apply,
         init_fn=femnist_mlp_init,
     ):
@@ -70,6 +81,20 @@ class ConstellationSim:
         self.init_fn = init_fn
         self.aw = access if access is not None else compute_access_windows(
             constellation, stations, horizon_s=self.cfg.horizon_s)
+        # Comms: algorithms marked `isl=True` (or an explicit link model)
+        # plan against a ContactPlan; everything else keeps the seed's
+        # AccessWindows-only path, bit for bit.
+        self.plan = contact_plan
+        if self.plan is None and (algorithm.isl or link_model is not None):
+            ground = link_model or ConstantRate(self.hw.link_mbps)
+            iw = None
+            if algorithm.isl:
+                topo = isl_topology or ISLTopology.walker_star(constellation)
+                iw = compute_isl_windows(constellation, topo,
+                                         horizon_s=self.cfg.horizon_s)
+            self.plan = build_contact_plan(
+                self.aw, iw, ground, isl_link or ground,
+                constellation=constellation, stations=stations)
         if self.cfg.train:
             assert data is not None and data.n_clients == constellation.n_sats
             # Jitted updaters are built lazily per power-of-two step bound so
@@ -126,17 +151,28 @@ class ConstellationSim:
         return out, weights
 
     def _eval(self, global_params, t: float) -> float:
-        """Evaluation-stage client selection: same contact protocol."""
+        """Evaluation-stage client selection: same contact protocol.
+
+        The eval batch is padded to the next power-of-two client count
+        (`_bound` idiom) with zero-weight rows, so `evaluate` — jitted on
+        the stacked shape — retraces per bucket instead of per distinct
+        participant count.
+        """
         c = min(self.cfg.clients_per_round, self.constellation.n_sats)
         plans = self.alg.selector.select(
             self.aw, t, range(self.constellation.n_sats), c,
             self.alg.strategy, self.hw, self.alg.local_epochs,
-            self.alg.min_epochs)
+            self.alg.min_epochs, plan=self.plan)
         ks = [p.k for p in plans] or list(range(min(c, self.data.n_clients)))
+        pad = self._bound([len(ks)]) - len(ks)
+        ks_p = ks + [ks[0]] * pad
+        n_eval = np.asarray(self.data.n_eval[ks_p]).copy()
+        if pad:
+            n_eval[len(ks):] = 0  # masked out of the weighted accuracy
         acc = evaluate(self.apply_fn, global_params,
-                       jnp.asarray(self.data.x_eval[ks]),
-                       jnp.asarray(self.data.y_eval[ks]),
-                       jnp.asarray(self.data.n_eval[ks]))
+                       jnp.asarray(self.data.x_eval[ks_p]),
+                       jnp.asarray(self.data.y_eval[ks_p]),
+                       jnp.asarray(n_eval))
         return float(acc)
 
     # ------------------------------------------------------------------ #
@@ -156,7 +192,7 @@ class ConstellationSim:
                 break
             plans = alg.selector.select(
                 self.aw, t, range(K), c, alg.strategy, hw,
-                alg.local_epochs, alg.min_epochs)
+                alg.local_epochs, alg.min_epochs, plan=self.plan)
             if not plans:
                 break
             t_end = max(p.tx_end for p in plans)
@@ -183,6 +219,8 @@ class ConstellationSim:
                         for p in plans],
                 relays=[p.relay for p in plans],
                 staleness=[0] * len(plans),
+                relay_hops=[p.isl_hops for p in plans],
+                comms_bytes=[p.comm_bytes for p in plans],
             )
             if cfg.train and (r % cfg.eval_every == 0
                               or r == cfg.max_rounds - 1):
@@ -293,6 +331,8 @@ class ConstellationSim:
                 comm_s=[b[5] for b in buffer],
                 relays=[-1] * len(buffer),
                 staleness=staleness.tolist(),
+                relay_hops=[0] * len(buffer),
+                comms_bytes=[2.0 * hw.model_bytes] * len(buffer),
             )
             if cfg.train and (len(rounds) % cfg.eval_every == 0):
                 rec.accuracy = self._eval(global_params, t_agg)

@@ -17,10 +17,23 @@ class RoundRecord:
     relays: list[int]
     staleness: list[int]
     accuracy: float | None = None
+    # Comms accounting (repro.comms): ISL legs paid per participant's
+    # return (0 = direct upload or the seed's free relay), and total bytes
+    # on the wire per participant (model download + every return leg).
+    relay_hops: list[int] = dataclasses.field(default_factory=list)
+    comms_bytes: list[float] = dataclasses.field(default_factory=list)
 
     @property
     def duration_s(self) -> float:
         return self.t_end - self.t_start
+
+    @property
+    def total_relay_hops(self) -> int:
+        return sum(self.relay_hops)
+
+    @property
+    def total_comms_bytes(self) -> float:
+        return float(sum(self.comms_bytes))
 
     @property
     def mean_idle_frac(self) -> float:
@@ -63,6 +76,14 @@ class SimResult:
         vals = [sum(r.idle_s) / max(len(r.idle_s), 1) for r in self.rounds]
         return sum(vals) / len(vals) if vals else 0.0
 
+    @property
+    def total_relay_hops(self) -> int:
+        return sum(r.total_relay_hops for r in self.rounds)
+
+    @property
+    def total_comms_bytes(self) -> float:
+        return float(sum(r.total_comms_bytes for r in self.rounds))
+
     def time_to_accuracy(self, target: float) -> float | None:
         """Simulation seconds until `target` eval accuracy (None if never)."""
         for _, t, a in self.accuracy_curve:
@@ -81,4 +102,6 @@ class SimResult:
             "mean_round_duration_h": round(self.mean_round_duration_s / 3600, 3),
             "mean_idle_per_round_h": round(self.mean_idle_per_round_s / 3600, 3),
             "total_days": round(self.total_time_s / 86400, 2),
+            "relay_hops": self.total_relay_hops,
+            "comms_mb": round(self.total_comms_bytes / 1e6, 3),
         }

@@ -1,0 +1,274 @@
+"""`repro.comms`: link budgets, ISL windows, contact plans, relay routing.
+
+Includes the back-compat regression: with `ConstantRate` links and ISLs
+disabled the contact-plan code path must reproduce the seed's
+AccessWindows-only round timings bitwise.
+"""
+import numpy as np
+import pytest
+
+from repro.comms import (
+    ConstantRate,
+    ISLTopology,
+    LinkBudget,
+    build_contact_plan,
+    compute_isl_windows,
+    earliest_arrival,
+)
+from repro.core import ALGORITHMS
+from repro.core.timing import HardwareModel
+from repro.orbits import WalkerStar, compute_access_windows, station_subnetwork
+from repro.sim import ConstellationSim, SimConfig
+
+HORIZON = 4 * 86400.0
+
+
+@pytest.fixture(scope="module")
+def ring10():
+    """A dense single-plane cluster: persistent intra-plane ISL ring."""
+    c = WalkerStar(1, 10)
+    st = station_subnetwork(1)
+    aw = compute_access_windows(c, st, horizon_s=HORIZON)
+    iw = compute_isl_windows(c, horizon_s=HORIZON)
+    return c, st, aw, iw
+
+
+# ------------------------------------------------------------------ links --
+def test_constant_rate_matches_hardware_model_bitwise():
+    hw = HardwareModel()
+    link = ConstantRate(hw.link_mbps)
+    assert link.tx_time_s(hw.model_bytes) == hw.tx_time_s
+    assert hw.tx_time_for() == hw.tx_time_s
+    assert hw.tx_time_for(rate_bps=float(link.rate_bps())) == hw.tx_time_s
+
+
+def test_link_budget_rate_falls_with_range():
+    lb = LinkBudget()
+    ranges = np.array([500e3, 1500e3, 3000e3, 6000e3])
+    rates = np.asarray(lb.rate_bps(ranges))
+    assert (np.diff(rates) <= 0).all(), "rate must be non-increasing in range"
+    assert rates[0] <= lb.max_rate_bps
+    assert rates[-1] > 0
+    # Transfer time grows accordingly.
+    assert lb.tx_time_s(186_000, 6000e3) > lb.tx_time_s(186_000, 500e3)
+
+
+# -------------------------------------------------------------------- isl --
+def test_walker_star_topology_shape():
+    topo = ISLTopology.walker_star(WalkerStar(2, 5))
+    # Two rings of 5 edges, no cross-plane by default.
+    assert topo.n_edges == 10
+    assert all(i < j for i, j in topo.edges)
+    nbrs = topo.neighbors(10)
+    assert all(len(v) == 2 for v in nbrs.values())
+    cross = ISLTopology.walker_star(WalkerStar(2, 5), cross_plane=True)
+    assert cross.n_edges == 15  # + same-slot links, no Star-seam link
+
+
+def test_dense_ring_has_persistent_isl_contact(ring10):
+    _, _, _, iw = ring10
+    # Adjacent sats of a 10-per-plane ring at 500 km keep line of sight
+    # (paper Figure 2): every ring edge is in contact the whole horizon.
+    assert iw.n_edges == 10
+    for e in range(iw.n_edges):
+        assert iw.contact_fraction(e) == pytest.approx(1.0, abs=0.01)
+
+
+def test_sparse_plane_has_no_isl_contact():
+    # 2 satellites 180 deg apart: the earth blocks the link permanently.
+    iw = compute_isl_windows(WalkerStar(1, 2), horizon_s=86400.0)
+    assert iw.n_edges == 1
+    assert len(iw.per_edge[0][0]) == 0
+
+
+# ----------------------------------------------------------- contact plan --
+def test_contact_plan_ground_matches_access_windows(ring10):
+    c, _, aw, _ = ring10
+    hw = HardwareModel()
+    plan = build_contact_plan(aw, None, ConstantRate(hw.link_mbps))
+    for k in range(c.n_sats):
+        for t in (0.0, 3600.0, 86400.0):
+            w = aw.next_window(k, t)
+            cw = plan.next_window(("gs", k), t)
+            if w is None:
+                assert cw is None
+                continue
+            assert cw.start == w[0] and cw.end == w[1]
+            up = plan.next_ground_upload(k, t, hw.model_bytes)
+            assert up[0] == w[0]
+            assert up[1] == w[0] + hw.tx_time_s  # bitwise: same arithmetic
+
+
+def test_window_volume():
+    plan_rate = 580e6
+    from repro.comms import ContactWindow
+    w = ContactWindow(start=0.0, end=600.0, rate_bps=plan_rate)
+    assert w.volume_bytes == pytest.approx(600.0 * plan_rate / 8)
+
+
+def test_overlapping_station_windows_stay_queryable():
+    """Regression: windows from different stations may overlap, so `ends`
+    is not sorted by start-order; queries must still find the long window
+    that outlives a shorter, later-starting one."""
+    from repro.comms.contact_plan import ContactPlan, _EdgeWindows
+    ew = _EdgeWindows(starts=np.array([100.0, 150.0]),
+                      ends=np.array([500.0, 300.0]),
+                      rates=np.array([580e6, 580e6]))
+    plan = ContactPlan(n_sats=1, ground=[ew], isl={}, neighbors={},
+                       horizon_s=1000.0)
+    w = plan.next_window(("gs", 0), 400.0)   # inside (100, 500) only
+    assert w is not None and w.start == 400.0 and w.end == 500.0
+    up = plan.next_ground_upload(0, 400.0, 186_000)
+    assert up is not None and up[0] == 400.0
+    # After both windows close, nothing is live.
+    assert plan.next_window(("gs", 0), 600.0) is None
+
+
+def test_routing_low_hop_label_not_pruned_by_high_hop_arrival():
+    """Regression: a hop-exhausted label reaching a node early must not
+    discard a later low-hop label that can still extend to the goal."""
+    from repro.comms.contact_plan import ContactPlan, _EdgeWindows
+
+    def win(s, e, rate=580e6):
+        return _EdgeWindows(starts=np.array([float(s)]),
+                            ends=np.array([float(e)]),
+                            rates=np.array([rate]))
+
+    empty = _EdgeWindows(np.empty(0), np.empty(0), np.empty(0))
+    # Nodes: 0=A, 1=B, 2=C, 3=D. ISLs: A-C and C-B open immediately
+    # (2-hop path to B), A-B opens at t=50 (1-hop path), B-D always open.
+    # Only A and D ever see the ground: A very late, D at t=60.
+    plan = ContactPlan(
+        n_sats=4,
+        ground=[win(1000, 2000), empty, empty, win(60, 200)],
+        isl={(0, 2): win(0, 100), (1, 2): win(0, 100),
+             (0, 1): win(50, 100), (1, 3): win(0, 200)},
+        neighbors={0: [2, 1], 1: [2, 0, 3], 2: [0, 1], 3: [1]},
+        horizon_s=5000.0)
+    route = earliest_arrival(plan, 0, 0.0, 186_000, max_hops=2)
+    # Best: A -(t>=50)-> B -> D -> ground at ~60, i.e. path (0, 1, 3).
+    # Per-node pruning would kill the (0,1) label (B already reached at
+    # ~0 via C with both hops spent) and fall back to A's own pass at 1000.
+    assert route.path == (0, 1, 3)
+    assert route.isl_hops == 2
+    assert route.arrival_s < 100.0
+
+
+# ---------------------------------------------------------------- routing --
+def test_routing_beats_or_matches_direct(ring10):
+    c, _, aw, iw = ring10
+    hw = HardwareModel()
+    plan = build_contact_plan(aw, iw, ConstantRate(hw.link_mbps))
+    found_relay = False
+    for k in range(c.n_sats):
+        direct = plan.next_ground_upload(k, 0.0, hw.model_bytes)
+        route = earliest_arrival(plan, k, 0.0, hw.model_bytes, max_hops=3)
+        assert route is not None
+        assert route.arrival_s <= direct[1] + 1e-9
+        assert route.path[0] == k and len(route.path) == route.isl_hops + 1
+        assert route.bytes_on_wire == hw.model_bytes * (route.isl_hops + 1)
+        if route.isl_hops:
+            found_relay = True
+            # A relay must STRICTLY beat the direct upload (tie priority).
+            assert route.arrival_s < direct[1]
+            assert route.departure_s <= route.tx_start
+    assert found_relay, "a 10-sat ring over 1 station must find some relay"
+
+
+def test_routing_hop_bound(ring10):
+    c, _, aw, iw = ring10
+    hw = HardwareModel()
+    plan = build_contact_plan(aw, iw, ConstantRate(hw.link_mbps))
+    for k in range(c.n_sats):
+        r0 = earliest_arrival(plan, k, 0.0, hw.model_bytes, max_hops=0)
+        assert r0.isl_hops == 0  # degenerates to the direct upload
+        r1 = earliest_arrival(plan, k, 0.0, hw.model_bytes, max_hops=1)
+        assert r1.isl_hops <= 1
+        assert r1.arrival_s <= r0.arrival_s + 1e-9
+
+
+def test_routing_without_isl_edges_is_direct(ring10):
+    _, _, aw, _ = ring10
+    hw = HardwareModel()
+    plan = build_contact_plan(aw, None, ConstantRate(hw.link_mbps))
+    route = earliest_arrival(plan, 0, 0.0, hw.model_bytes, max_hops=3)
+    direct = plan.next_ground_upload(0, 0.0, hw.model_bytes)
+    assert route.isl_hops == 0 and route.arrival_s == direct[1]
+
+
+# ------------------------------------------------------------ integration --
+def test_sim_backcompat_bitwise_with_constant_rate(ring10):
+    """Acceptance: ConstantRate + ISLs disabled => round timings bitwise
+    identical between the seed path (no plan) and the contact-plan path."""
+    c, st, aw, _ = ring10
+    hw = HardwareModel()
+    cfg = SimConfig(max_rounds=5, horizon_s=HORIZON, train=False)
+    plan = build_contact_plan(aw, None, ConstantRate(hw.link_mbps))
+    for alg in ("fedavg", "fedavg_sched", "fedprox"):
+        seed = ConstellationSim(c, st, ALGORITHMS[alg], cfg=cfg,
+                                access=aw).run()
+        planned = ConstellationSim(c, st, ALGORITHMS[alg], cfg=cfg,
+                                   access=aw, contact_plan=plan).run()
+        assert [r.t_start for r in seed.rounds] == \
+            [r.t_start for r in planned.rounds]
+        assert [r.t_end for r in seed.rounds] == \
+            [r.t_end for r in planned.rounds]
+        assert [r.participants for r in seed.rounds] == \
+            [r.participants for r in planned.rounds]
+        assert [r.idle_s for r in seed.rounds] == \
+            [r.idle_s for r in planned.rounds]
+
+
+def test_isl_sim_reports_hops_and_bytes(ring10):
+    """Acceptance: an *_intracc_isl entry runs end-to-end and RoundRecord
+    reports nonzero relay hops and comms bytes."""
+    c, st, aw, _ = ring10
+    cfg = SimConfig(max_rounds=4, horizon_s=HORIZON, train=False)
+    res = ConstellationSim(c, st, ALGORITHMS["fedavg_intracc_isl"],
+                           cfg=cfg, access=aw).run()
+    assert res.n_rounds > 0
+    assert res.total_relay_hops > 0
+    assert res.total_comms_bytes > 0
+    hw = HardwareModel()
+    for r in res.rounds:
+        assert len(r.relay_hops) == len(r.participants)
+        for hops, relay, bytes_ in zip(r.relay_hops, r.relays, r.comms_bytes):
+            # download + (hops ISL legs + 1 ground upload)
+            assert bytes_ == hw.model_bytes * (hops + 2)
+            if hops:
+                assert relay != -1
+    # Relaying can only help: no worse than the no-relay baseline.
+    base = ConstellationSim(c, st, ALGORITHMS["fedavg"], cfg=cfg,
+                            access=aw).run()
+    assert res.mean_round_duration_s <= base.mean_round_duration_s + 1e-6
+
+
+def test_link_budget_plan_multi_station_agrees_with_access():
+    """Geometry-priced ground windows (unmerged, possibly overlapping)
+    must agree with the merged AccessWindows on contact existence."""
+    c = WalkerStar(1, 2)
+    st = station_subnetwork(3)
+    aw = compute_access_windows(c, st, horizon_s=2 * 86400.0)
+    plan = build_contact_plan(aw, None, LinkBudget(),
+                              constellation=c, stations=st)
+    for k in range(c.n_sats):
+        for t in np.linspace(0.0, 2 * 86400.0, 97):
+            w_merged = aw.next_window(k, float(t))
+            w_plan = plan.next_window(("gs", k), float(t))
+            assert (w_merged is None) == (w_plan is None)
+            if w_merged is not None:
+                # Same next usable contact instant; the plan's window may
+                # end earlier (it is a single station's pass, not a merge).
+                assert w_plan.start == pytest.approx(w_merged[0])
+                assert w_plan.rate_bps > 0
+
+
+def test_isl_sim_with_link_budget(ring10):
+    """Geometry-dependent rates also run end-to-end."""
+    c, st, aw, _ = ring10
+    cfg = SimConfig(max_rounds=2, horizon_s=HORIZON, train=False)
+    res = ConstellationSim(c, st, ALGORITHMS["fedavg_intracc_isl"],
+                           cfg=cfg, access=aw,
+                           link_model=LinkBudget()).run()
+    assert res.n_rounds > 0
+    assert res.total_comms_bytes > 0

@@ -150,18 +150,53 @@ def test_return_is_next_pass(access):
             assert p.tx_start >= w[1], "upload must wait for a later pass"
 
 
+def test_relay_peer_beats_own_return_window(access):
+    """A relay is only assigned when the peer's ground window opens
+    STRICTLY before the training satellite's own next pass (the original
+    satellite keeps priority on ties)."""
+    c, aw = access
+    hw = HardwareModel()
+    plans = IntraCCSelector().select(aw, 0.0, range(c.n_sats), c.n_sats,
+                                     FedAvgSat(), hw, 5)
+    relayed = [p for p in plans if p.relay != -1]
+    assert relayed, "a 5-per-plane cluster over 3 stations must relay some"
+    for p in plans:
+        own = aw.next_window(p.k, max(p.train_end,
+                                      aw.next_window(p.k, p.rx_start)[1] + 1.0))
+        if p.relay != -1:
+            assert p.relay in aw.cluster_members(p.k)
+            assert p.relay != p.k
+            assert p.relay_path == (p.k, p.relay)
+            # The relayed upload must start before the own-satellite pass.
+            if own is not None:
+                assert p.tx_start < own[0]
+        elif own is not None:
+            # No relay assigned: the own pass was never beaten.
+            assert p.tx_start <= own[0] + 1e-6
+
+
 # ------------------------------------------------------------- registry --
 def test_algorithm_suite_is_papers_table1():
-    assert set(ALGORITHMS) == {
+    from repro.core import TABLE1_ALGORITHMS
+    assert set(TABLE1_ALGORITHMS) == {
         "fedavg", "fedavg_sched", "fedavg_intracc",
         "fedprox", "fedprox_sched", "fedprox_sched_v2", "fedprox_intracc",
         "fedbuff",
     }
+    # The registered suite = Table 1 + the ISL-priced relay extensions.
+    assert set(ALGORITHMS) == set(TABLE1_ALGORITHMS) | {
+        "fedavg_intracc_isl", "fedprox_intracc_isl",
+    }
     assert not ALGORITHMS["fedbuff"].synchronous
     assert ALGORITHMS["fedprox_sched_v2"].min_epochs == 5
+    assert ALGORITHMS["fedavg_intracc_isl"].isl
+    assert not ALGORITHMS["fedavg_intracc"].isl
 
 
 def test_spaceify_composition():
     alg = spaceify(FedProxSat(), schedule=True, intracc=True)
     assert isinstance(alg.selector, IntraCCSelector)
     assert alg.selector.schedule
+    isl = spaceify(FedProxSat(), intracc=True, isl=True, max_hops=2)
+    assert isl.name == "fedprox_intracc_isl"
+    assert isl.isl and isl.selector.max_hops == 2

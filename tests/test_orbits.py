@@ -82,6 +82,33 @@ def test_next_window_semantics():
         aw.next_window(0, e[-1] + 1)[0] > e[-1]
 
 
+def test_subset_ladder_is_nested():
+    """Windows under n stations are a subset of windows under n+1: every
+    contact instant available in the smaller network stays available in
+    the larger one (the paper's station ladder is nested by construction),
+    and total contact time is monotone in network size."""
+    c = WalkerStar(2, 2)
+    full = compute_access_windows(c, station_subnetwork(5),
+                                  horizon_s=2 * 86400.0)
+    subs = [full.subset(n) for n in (1, 2, 3, 5)]
+    for small, big in zip(subs, subs[1:]):
+        for k in range(c.n_sats):
+            s_s, e_s = small.per_sat[k]
+            # Each small-network window is covered by some big-network one.
+            for s, e in zip(s_s, e_s):
+                s_b, e_b = big.per_sat[k]
+                covered = ((s_b <= s + 1e-9) & (e_b >= e - 1e-9)).any()
+                assert covered, (k, s, e)
+            assert small.contact_fraction(k) <= \
+                big.contact_fraction(k) + 1e-12
+    # subset(G_max) must reproduce the full computation exactly.
+    for k in range(c.n_sats):
+        np.testing.assert_array_equal(subs[-1].per_sat[k][0],
+                                      full.per_sat[k][0])
+        np.testing.assert_array_equal(subs[-1].per_sat[k][1],
+                                      full.per_sat[k][1])
+
+
 def test_walker_star_geometry():
     c = WalkerStar(4, 5)
     el = c.elements()
