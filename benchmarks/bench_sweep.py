@@ -30,13 +30,16 @@ ISL_SUITE = ("fedavg_intracc_isl", "fedprox_intracc_isl")
 
 
 def run(rounds: int = 20, quick: bool = False, isl: bool = False,
-        horizon_s: float = HORIZON_S):
+        horizon_s: float = HORIZON_S, workload: str | None = None):
     algs = ALG_SUITE[:4] if quick else ALG_SUITE
     if isl:
         algs = algs + ISL_SUITE
     clusters = (2, 10) if quick else CLUSTERS
     sats = (2, 10) if quick else SATS_PER_CLUSTER
     stations = (1, 13) if quick else STATIONS
+    # Non-default workloads re-price every scenario (model bytes / epoch
+    # FLOPs from the workload's derived cost model) and tag the row names.
+    wtag = f"/{workload}" if workload else ""
     rows = []
     n_run = n_skip = 0
     for alg in algs:
@@ -45,26 +48,28 @@ def run(rounds: int = 20, quick: bool = False, isl: bool = False,
                 for g in stations:
                     if cl * sp < 2:
                         n_skip += 1   # single satellite cannot federate
-                        rows.append((f"sweep/{alg}/c{cl}s{sp}/g{g}",
+                        rows.append((f"sweep{wtag}/{alg}/c{cl}s{sp}/g{g}",
                                      0, "skip:K<2"))
                         continue
                     res = run_scenario(alg, cl, sp, g, rounds=rounds,
-                                       horizon_s=horizon_s)
+                                       horizon_s=horizon_s,
+                                       workload=workload)
                     derived = round(res.mean_idle_per_round_s / 3600, 3)
                     if alg.endswith("_isl"):
                         derived = (f"idle_h={derived};"
                                    f"hops={res.total_relay_hops};"
                                    f"mb={round(res.total_comms_bytes / 1e6, 2)}")
                     rows.append((
-                        f"sweep/{alg}/c{cl}s{sp}/g{g}",
+                        f"sweep{wtag}/{alg}/c{cl}s{sp}/g{g}",
                         round(res.mean_round_duration_s / 3600, 3),
                         derived))
                     n_run += 1
-    rows.append(("sweep/scenarios_run", n_run, f"skipped={n_skip}"))
+    rows.append((f"sweep{wtag}/scenarios_run", n_run, f"skipped={n_skip}"))
     return rows
 
 
 def main(argv=None):
+    from repro.core import workload_names
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--quick", action="store_true")
@@ -72,11 +77,14 @@ def main(argv=None):
                     help="add the ISL-enabled *_intracc_isl variants")
     ap.add_argument("--horizon-days", type=float, default=None,
                     help="override the 90-day scenario (smoke/CI runs)")
+    ap.add_argument("--workload", default=None, choices=workload_names(),
+                    help="re-price the sweep for a registry workload "
+                         "(default: the seed's femnist_mlp constants)")
     args = ap.parse_args(argv)
     horizon_s = (args.horizon_days * 86400.0 if args.horizon_days
                  else HORIZON_S)
     emit(run(rounds=args.rounds, quick=args.quick, isl=args.isl,
-             horizon_s=horizon_s))
+             horizon_s=horizon_s, workload=args.workload))
 
 
 if __name__ == "__main__":

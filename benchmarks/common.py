@@ -20,8 +20,7 @@ from repro.comms import (                                           # noqa: E402
     build_contact_plan,
     compute_isl_windows,
 )
-from repro.core import ALGORITHMS                                   # noqa: E402
-from repro.data import synth_femnist                                # noqa: E402
+from repro.core import ALGORITHMS, get_workload                     # noqa: E402
 from repro.orbits import (                                          # noqa: E402
     WalkerStar,
     compute_access_windows,
@@ -90,17 +89,23 @@ def contact_plan(clusters: int, sats: int, n_stations: int,
 
 _DATA_CACHE: dict = {}
 
+DEFAULT_WORKLOAD = "femnist_mlp"
 
-def data_for(n_sats: int, seed: int = 0):
-    key = (n_sats, seed)
+
+def data_for(n_sats: int, seed: int = 0, workload: str = DEFAULT_WORKLOAD):
+    key = (workload, n_sats, seed)
     if key not in _DATA_CACHE:
-        _DATA_CACHE[key] = synth_femnist(n_sats, seed=seed)
+        _DATA_CACHE[key] = get_workload(workload).make_data(n_sats, seed=seed)
     return _DATA_CACHE[key]
 
 
 def run_scenario(alg: str, clusters: int, sats: int, n_stations: int,
                  *, rounds: int = 30, train: bool = False, seed: int = 0,
-                 eval_every: int = 10, horizon_s: float = HORIZON_S):
+                 eval_every: int = 10, horizon_s: float = HORIZON_S,
+                 workload: str | None = None):
+    """Run one sweep cell. `workload=None` is the seed's FEMNIST-MLP path
+    (bitwise); naming a registry workload swaps the model + loss + data
+    AND the hardware cost model (comms bytes / epoch times) it implies."""
     c = WalkerStar(clusters, sats)
     aw = access(clusters, sats, n_stations, horizon_s)
     algorithm = ALGORITHMS[alg]
@@ -108,10 +113,13 @@ def run_scenario(alg: str, clusters: int, sats: int, n_stations: int,
             if algorithm.isl else None)
     cfg = SimConfig(max_rounds=rounds, horizon_s=horizon_s, train=train,
                     eval_every=eval_every, seed=seed)
+    # The engine derives HardwareModel.for_workload(workload) itself.
+    kwargs = {} if workload is None else {"workload": workload}
     sim = ConstellationSim(
         c, station_subnetwork(n_stations), algorithm,
-        data=data_for(c.n_sats, seed) if train else None,
-        cfg=cfg, access=aw, contact_plan=plan)
+        data=(data_for(c.n_sats, seed, workload or DEFAULT_WORKLOAD)
+              if train else None),
+        cfg=cfg, access=aw, contact_plan=plan, **kwargs)
     return sim.run()
 
 

@@ -1,14 +1,18 @@
 """Benchmark entry point: one suite per paper table/figure.
 
-  python -m benchmarks.run [--full] [--only NAME]
+  python -m benchmarks.run [--full] [--only NAME] [--json PATH]
 
-Emits ``name,value,derived`` CSV per suite. Default budgets keep the whole
-run CPU-tractable; --full expands to the paper's complete grids (including
-the 768-scenario Table-1 sweep).
+Emits ``name,value,derived`` CSV per suite and writes a machine-readable
+``BENCH_sweep.json`` artifact (per-scenario rows + per-suite wall-clock)
+so the perf trajectory is diffable across PRs. Default budgets keep the
+whole run CPU-tractable; --full expands to the paper's complete grids
+(including the 768-scenario Table-1 sweep).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -35,24 +39,51 @@ SUITES = {
     "roofline": lambda full: bench_roofline.run(),
 }
 
+DEFAULT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_sweep.json")
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None, choices=list(SUITES) + [None])
+    ap.add_argument("--json", default=DEFAULT_JSON,
+                    help="machine-readable artifact path ('' disables)")
     args = ap.parse_args(argv)
 
+    artifact: dict = {"schema": 1, "generated_unix": round(time.time(), 1),
+                      "full": bool(args.full), "only": args.only,
+                      "suites": {}}
     names = [args.only] if args.only else list(SUITES)
+    t_total = time.time()
     for name in names:
         print(f"# ==== {name} ====")
         t0 = time.time()
         try:
             rows = SUITES[name](args.full)
             emit(rows)
-            print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s")
+            wall = time.time() - t0
+            print(f"# {name}: {len(rows)} rows in {wall:.1f}s")
+            artifact["suites"][name] = {
+                "wall_s": round(wall, 2),
+                "rows": [list(r) for r in rows],
+            }
         except Exception as e:  # noqa: BLE001
             print(f"# {name}: FAILED {repr(e)[:300]}")
+            artifact["suites"][name] = {
+                "wall_s": round(time.time() - t0, 2),
+                "error": repr(e)[:300],
+            }
         sys.stdout.flush()
+    artifact["wall_s_total"] = round(time.time() - t_total, 2)
+    if args.only and args.json == DEFAULT_JSON:
+        # Don't clobber the cross-PR trend artifact with a partial run;
+        # pass --json explicitly to write one anyway.
+        print("# --only run: skipping default BENCH_sweep.json write")
+    elif args.json:
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"# wrote {os.path.normpath(args.json)}")
 
 
 if __name__ == "__main__":

@@ -1,92 +1,67 @@
 """End-to-end driver: federate a transformer across a satellite cluster.
 
-The paper's orchestration applied to an assigned LM architecture: each
-satellite fine-tunes a (reduced) transformer on its own token stream
-between ground passes; the space-ified strategy aggregates parameter
-returns per Eq. 1. Orbital timing comes from the same access-window engine
-as the FEMNIST experiments — this is the "FL technique as a first-class
-feature over the LM stack" integration.
+The paper's orchestration applied to an assigned LM architecture — now
+through the *real* simulation engine: `ConstellationSim` runs the same
+event loops, selection protocols, and contact-plan timing as the FEMNIST
+experiments, with the LM supplied as a `Workload` (model + next-token
+loss + federated token shards + derived cost model). Comms bytes and
+epoch times are priced from the reduced architecture's actual parameter
+tree via `HardwareModel.for_workload`, so round durations reflect moving
+*this* model over the telemetry link.
 
   PYTHONPATH=src python examples/constellation_llm.py \
-      --arch gemma-2b --rounds 6 --local-steps 8
+      --arch gemma-2b --rounds 6 --alg fedprox
 """
 import argparse
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.configs import get_config, lm_arch_ids
-from repro.core import ALGORITHMS
-from repro.core.timing import lm_hardware_model
-from repro.data.tokens import synthetic_token_batch
-from repro.models.lm import count_params, init_params
-from repro.optim.sgd import sgd_update
+from repro.core import ALGORITHMS, lm_workload
+from repro.core.timing import HardwareModel
 from repro.orbits import WalkerStar, compute_access_windows, station_subnetwork
-from repro.train.step import lm_loss
+from repro.sim import ConstellationSim, SimConfig
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b", choices=lm_arch_ids())
     ap.add_argument("--rounds", type=int, default=6)
-    ap.add_argument("--local-steps", type=int, default=8)
     ap.add_argument("--sats", type=int, default=4)
-    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--max-steps", type=int, default=16)
+    ap.add_argument("--alg", default="fedavg_sched", choices=sorted(ALGORITHMS))
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).reduced()
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    n_params = count_params(params)
-    print(f"federating {cfg.name}: {n_params/1e6:.2f}M params across "
-          f"{args.sats} satellites")
+    wl = lm_workload(get_config(args.arch).reduced(), seq_len=args.seq,
+                     samples_per_client=4 * args.batch)
+    hw = HardwareModel.for_workload(wl)
+    print(f"federating {wl.name}: {wl.n_params/1e6:.2f}M params "
+          f"({wl.model_bytes/1e6:.1f} MB on the wire, "
+          f"{hw.tx_time_s:.2f}s per transfer) across {args.sats} satellites")
 
     # Orbital side: one cluster of `sats` satellites, 3 ground stations.
     c = WalkerStar(clusters=1, sats_per_cluster=args.sats)
-    aw = compute_access_windows(c, station_subnetwork(3),
-                                horizon_s=30 * 86400.0)
-    alg = ALGORITHMS["fedavg_sched"]
-    hw = lm_hardware_model(n_params, flops_per_step=6.0 * n_params
-                           * args.seq * 2)
+    horizon_s = 30 * 86400.0
+    aw = compute_access_windows(c, station_subnetwork(3), horizon_s=horizon_s)
+    cfg = SimConfig(max_rounds=args.rounds, horizon_s=horizon_s,
+                    batch_size=args.batch, lr=args.lr, eval_every=1,
+                    max_steps=args.max_steps)
+    sim = ConstellationSim(c, station_subnetwork(3), ALGORITHMS[args.alg],
+                           workload=wl, hw=hw, cfg=cfg, access=aw)
+    res = sim.run()
 
-    # Each satellite's local (non-IID) token stream: distinct Markov chains.
-    streams = [jnp.asarray(synthetic_token_batch(2, args.seq + 1,
-                                                 cfg.vocab_size, seed=k))
-               for k in range(args.sats)]
-
-    grad_fn = jax.jit(jax.grad(
-        lambda p, t: lm_loss(cfg, p, {"tokens": t})[0]))
-    loss_fn = jax.jit(lambda p, t: lm_loss(cfg, p, {"tokens": t})[0])
-
-    t_sim = 0.0
-    for rnd in range(args.rounds):
-        plans = alg.selector.select(aw, t_sim, range(args.sats),
-                                    args.sats, alg.strategy, hw,
-                                    local_epochs=args.local_steps)
-        if not plans:
-            break
-        client_params = []
-        for p in plans:
-            local = params
-            for _ in range(args.local_steps):
-                local = sgd_update(local, grad_fn(local, streams[p.k]),
-                                   args.lr)
-            client_params.append(local)
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *client_params)
-        weights = jnp.ones((len(plans),))
-        params = alg.strategy.aggregate(
-            params, stacked, weights, jnp.zeros(len(plans), jnp.int32))
-        t_sim = max(p.tx_end for p in plans)
-        losses = [float(loss_fn(params, s)) for s in streams]
-        print(f"round {rnd}: day {t_sim/86400:5.2f}  "
-              f"mean holdout loss {np.mean(losses):.4f}  "
-              f"participants {[p.k for p in plans]}")
+    for rec in res.rounds:
+        acc = f"{rec.accuracy:.4f}" if rec.accuracy is not None else "  -   "
+        print(f"round {rec.idx}: day {rec.t_end/86400:5.2f}  "
+              f"token-acc {acc}  participants {rec.participants}  "
+              f"comms {rec.total_comms_bytes/1e6:.1f} MB")
+    print(f"{res.n_rounds} rounds in {res.total_time_s/86400:.1f} simulated "
+          f"days; best token accuracy {res.max_accuracy:.4f}")
 
 
 if __name__ == "__main__":

@@ -28,6 +28,13 @@ from repro.core.spaceify import (
     SpaceifiedAlgorithm,
     spaceify,
 )
+from repro.core.workload import (
+    Workload,
+    get_workload,
+    lm_workload,
+    register_workload,
+    workload_names,
+)
 
 __all__ = [
     "Strategy",
@@ -43,4 +50,9 @@ __all__ = [
     "spaceify",
     "ALGORITHMS",
     "TABLE1_ALGORITHMS",
+    "Workload",
+    "get_workload",
+    "lm_workload",
+    "register_workload",
+    "workload_names",
 ]

@@ -7,6 +7,13 @@ One jitted, vmap-able function covers all three strategies:
     orbital itinerary (train-until-contact), realised by masking steps
     beyond a client's budget inside a shared fori_loop.
 
+The update is *workload-agnostic*: the data term is any
+``loss_fn(params, xb, yb) -> scalar`` (classification cross-entropy,
+LM next-token CE, ...); this module only adds the proximal term
+``0.5 * mu * ||w - w_anchor||^2`` and the masked SGD loop around it.
+Passing ``apply_fn`` instead keeps the seed's FEMNIST contract
+(cross-entropy over logits) bit for bit.
+
 The proximal gradient  g + mu * (w - w_anchor)  and the SGD update are the
 fused-update hot spot the Pallas `prox_sgd` kernel implements; the jnp path
 here is the oracle.
@@ -25,29 +32,48 @@ def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
     return -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
 
 
+def classification_loss(apply_fn: Callable) -> Callable:
+    """The seed's FEMNIST data term: mean cross-entropy over logits."""
+
+    def loss_fn(params, xb, yb):
+        return jnp.mean(cross_entropy(apply_fn(params, xb), yb))
+
+    return loss_fn
+
+
 def make_client_update(
-    apply_fn: Callable,
+    apply_fn: Callable | None = None,
     lr: float = 0.05,
     batch_size: int = 32,
     max_steps: int = 64,
+    *,
+    loss_fn: Callable | None = None,
 ) -> Callable:
     """Build the jitted ClientUpdate.
 
+    Provide either `apply_fn` (classification: cross-entropy over logits,
+    the seed contract) or a generic `loss_fn(params, xb, yb) -> scalar`
+    data term (any workload: LM next-token CE, regression, ...).
+
     Returns fn(params0, anchor, x, y, n_valid, steps, prox_mu, rng) -> params
     where every array may carry a leading client axis under vmap:
-      x: (N, 28, 28, 1), y: (N,), n_valid: () int, steps: () int <= max_steps.
+      x: (N, *sample_shape), y: (N,), n_valid: () int, steps: () int
+      <= max_steps.
     `anchor` is the round's global model (the proximal anchor w_t).
     """
+    if loss_fn is None:
+        if apply_fn is None:
+            raise ValueError("make_client_update needs apply_fn or loss_fn")
+        loss_fn = classification_loss(apply_fn)
 
-    def loss_fn(params, anchor, x, y, prox_mu):
-        logits = apply_fn(params, x)
-        ce = jnp.mean(cross_entropy(logits, y))
+    def prox_loss_fn(params, anchor, x, y, prox_mu):
+        data = loss_fn(params, x, y)
         sq = sum(jnp.sum((p - a) ** 2)
                  for p, a in zip(jax.tree.leaves(params),
                                  jax.tree.leaves(anchor)))
-        return ce + 0.5 * prox_mu * sq
+        return data + 0.5 * prox_mu * sq
 
-    grad_fn = jax.grad(loss_fn)
+    grad_fn = jax.grad(prox_loss_fn)
 
     def client_update(params0, anchor, x, y, n_valid, steps, prox_mu, rng):
         def body(i, carry):

@@ -50,6 +50,31 @@ class HardwareModel:
         n = int(max(0.0, t1 - t0) / self.epoch_time_s)
         return min(n, self.max_local_epochs) if cap else n
 
+    @classmethod
+    def for_workload(cls, workload, *, gflops: float | None = None,
+                     link_mbps: float | None = None,
+                     max_local_epochs: int | None = None) -> "HardwareModel":
+        """Price a `repro.core.workload.Workload` on the paper's satellite.
+
+        `model_bytes` / `epoch_mflops` come from the workload's derived
+        cost model (parameter tree + architecture config), so comms times
+        and epoch times scale with the model actually being federated.
+        Compute/link knobs keep the paper's section-5 platform unless
+        overridden. For `femnist_mlp` — whose cost is pinned to the paper
+        constants — this returns exactly `HardwareModel()`.
+        """
+        from repro.core.workload import get_workload
+        wl = get_workload(workload)
+        kwargs = dict(epoch_mflops=float(wl.epoch_mflops),
+                      model_bytes=int(wl.model_bytes))
+        if gflops is not None:
+            kwargs["gflops"] = gflops
+        if link_mbps is not None:
+            kwargs["link_mbps"] = link_mbps
+        if max_local_epochs is not None:
+            kwargs["max_local_epochs"] = max_local_epochs
+        return cls(**kwargs)
+
 
 def lm_hardware_model(n_params: int, flops_per_step: float,
                       steps_per_epoch: int = 1,

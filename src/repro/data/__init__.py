@@ -1,4 +1,6 @@
-from repro.data.femnist import FederatedDataset, synth_femnist
-from repro.data.tokens import synthetic_token_batch
+from repro.data.federated import FederatedDataset
+from repro.data.femnist import synth_femnist
+from repro.data.tokens import federated_token_shards, synthetic_token_batch
 
-__all__ = ["FederatedDataset", "synth_femnist", "synthetic_token_batch"]
+__all__ = ["FederatedDataset", "synth_femnist", "synthetic_token_batch",
+           "federated_token_shards"]

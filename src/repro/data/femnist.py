@@ -17,9 +17,9 @@ paper's *relative* claims on this stand-in (see DESIGN.md section 5).
 """
 from __future__ import annotations
 
-import dataclasses
-
 import numpy as np
+
+from repro.data.federated import FederatedDataset
 
 N_CLASSES = 47
 IMG = 28
@@ -90,26 +90,6 @@ def _render(proto: np.ndarray, style, rng: np.random.Generator) -> np.ndarray:
            + wy * wx * proto[y0 + 1, x0 + 1])
     img = gain * img + rng.normal(size=img.shape).astype(np.float32) * 0.15
     return np.clip(img, 0.0, 1.0).astype(np.float32)
-
-
-@dataclasses.dataclass
-class FederatedDataset:
-    """Stacked per-client arrays, padded to a common sample count.
-
-    x: (K, N, 28, 28, 1) float32;  y: (K, N) int32;
-    n: (K,) valid-sample counts;  x_eval/y_eval/n_eval: held-out shards.
-    """
-
-    x: np.ndarray
-    y: np.ndarray
-    n: np.ndarray
-    x_eval: np.ndarray
-    y_eval: np.ndarray
-    n_eval: np.ndarray
-
-    @property
-    def n_clients(self) -> int:
-        return self.x.shape[0]
 
 
 def synth_femnist(n_clients: int, seed: int = 0,

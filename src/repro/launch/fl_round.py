@@ -20,6 +20,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.aggregation import participation_masked_psum
 from repro.models.lm.config import ModelConfig
+from repro.sharding.compat import shard_map
 from repro.train.step import lm_loss
 
 
@@ -59,7 +60,7 @@ def make_fl_round_step(cfg: ModelConfig, mesh, lr: float = 1e-3,
 
     def round_step(params, batch, weights):
         specs = {k: batch_specs[k] for k in batch}
-        return jax.shard_map(
+        return shard_map(
             pod_round,
             mesh=mesh,
             in_specs=(P(), specs, P(axis)),

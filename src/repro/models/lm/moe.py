@@ -191,11 +191,13 @@ def apply_moe_ep(p: dict, x: jax.Array, cfg: MoEConfig, mlp_kind: str,
         return y.reshape(b_loc, S, d), aux
 
     from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.compat import shard_map
     gated = mlp_kind in ("swiglu", "geglu")
     in_specs = (P(dp_axes), P(), P(axis), P(axis),
                 P(axis) if gated else P(), P())
     out_specs = (P(dp_axes), {"load_balance": P(), "router_z": P()})
-    return jax.shard_map(
+    return shard_map(
         shard_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         axis_names=set(dp_axes) | {axis},
     )(x, p["router"], p["w1"], p["w2"],

@@ -1,3 +1,4 @@
+from repro.sharding.compat import abstract_mesh, shard_map
 from repro.sharding.specs import (
     param_pspecs,
     batch_pspec,
@@ -5,4 +6,5 @@ from repro.sharding.specs import (
     MeshAxes,
 )
 
-__all__ = ["param_pspecs", "batch_pspec", "cache_pspecs", "MeshAxes"]
+__all__ = ["param_pspecs", "batch_pspec", "cache_pspecs", "MeshAxes",
+           "abstract_mesh", "shard_map"]

@@ -1,0 +1,60 @@
+"""JAX version-compatibility shims for sharding entry points.
+
+The repo targets both the modern public API (``jax.shard_map``, the
+two-tuple ``AbstractMesh(axis_sizes, axis_names)`` constructor) and the
+jax 0.4.x series baked into the container, where shard_map still lives in
+``jax.experimental.shard_map`` (with ``auto=`` instead of ``axis_names=``)
+and ``AbstractMesh`` takes a ``((name, size), ...)`` shape tuple. All
+callers go through these wrappers so the version split lives in one file.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # jax >= 0.5: public API
+    _shard_map_new = jax.shard_map
+except AttributeError:
+    _shard_map_new = None
+
+try:
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+except ImportError:  # future jax may drop the experimental home entirely
+    _shard_map_exp = None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None):
+    """``jax.shard_map`` with the modern keyword surface on any jax.
+
+    ``axis_names`` lists the mesh axes the body handles *manually*; the
+    rest stay automatic (GSPMD). On jax 0.4.x this is translated to the
+    experimental API's ``auto=`` complement set.
+    """
+    if _shard_map_new is not None:
+        kwargs = {} if axis_names is None else {"axis_names": set(axis_names)}
+        return _shard_map_new(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kwargs)
+    kwargs = {}
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kwargs["auto"] = auto
+            # Replication checking does not support auto axes on 0.4.x.
+            kwargs["check_rep"] = False
+    mapped = _shard_map_exp(f, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, **kwargs)
+    # 0.4.x only implements auto axes under jit (the eager impl rule
+    # raises NotImplementedError), so close the gap here.
+    return jax.jit(mapped) if auto else mapped
+
+
+def abstract_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...]):
+    """Device-free mesh for symbolic lowering, on either constructor."""
+    from jax.sharding import AbstractMesh
+
+    params = inspect.signature(AbstractMesh.__init__).parameters
+    if "shape_tuple" in params:  # jax 0.4.x
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+    return AbstractMesh(tuple(axis_sizes), tuple(axis_names))

@@ -8,18 +8,24 @@ Couples four layers:
                                              or explicit link models);
   * the FL algorithm  (`repro.core`)       — selection + client regime +
                                              aggregation;
-  * real gradients    (`repro.core.client`)— vmapped on-board SGD on the
-                                             federated dataset.
+  * the workload      (`repro.core.workload`) — model init/loss/eval, the
+                                             batch schema, and the derived
+                                             cost model (what the
+                                             satellites actually train:
+                                             FEMNIST classifiers, LM
+                                             fine-tuning, ...).
 
 Synchronous algorithms (FedAvg/FedProx families) run the round-barrier
 loop of Algorithms 1-2; FedBuff runs the asynchronous buffered event loop
-of Algorithm 3. Both produce the paper's three metrics per round: accuracy,
-round duration, and per-satellite idle time.
+of Algorithm 3. Both share one round-execution core (`_run_clients` +
+`_finish_round`) and produce the paper's three metrics per round:
+accuracy, round duration, and per-satellite idle time.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+from typing import Iterable
 
 import jax
 import jax.numpy as jnp
@@ -28,12 +34,13 @@ import numpy as np
 from repro.comms.contact_plan import ContactPlan, build_contact_plan
 from repro.comms.isl import ISLTopology, compute_isl_windows
 from repro.comms.links import ConstantRate, LinkModel
-from repro.core.client import evaluate, make_client_update
+from repro.core.client import make_client_update
 from repro.core.spaceify import SpaceifiedAlgorithm
-from repro.core.strategies.base import ClientWorkMode
 from repro.core.timing import HardwareModel
-from repro.data.femnist import FederatedDataset
+from repro.core.workload import Workload, get_workload
+from repro.data.federated import FederatedDataset
 from repro.models.femnist_mlp import femnist_mlp_apply, femnist_mlp_init
+from repro.orbits import constants as C
 from repro.orbits.access import AccessWindows, compute_access_windows
 from repro.orbits.walker import WalkerStar
 from repro.sim.metrics import RoundRecord, SimResult
@@ -52,8 +59,34 @@ class SimConfig:
     train: bool = True               # False: timing-only sweep (no gradients)
 
 
+def buffer_weights(ns: np.ndarray, staleness: np.ndarray,
+                   max_staleness: int) -> np.ndarray:
+    """FedBuff admission: updates staler than the bound get zero weight.
+
+    `ns` are the raw aggregation weights (client sample counts), `staleness`
+    the global-version lag of each buffered update.
+    """
+    admit = staleness <= max_staleness
+    return ns * admit
+
+
+def prune_history(history: dict, outstanding: Iterable[int],
+                  version: int) -> None:
+    """Drop global-model versions no in-flight client still anchors on.
+
+    `outstanding` holds the download versions of every in-flight client;
+    versions >= min(outstanding) must survive (they are future proximal
+    anchors). With nothing in flight only the current `version` is kept.
+    Mutates `history` in place.
+    """
+    keep_from = min(outstanding, default=version)
+    for v in list(history):
+        if v < keep_from:
+            del history[v]
+
+
 class ConstellationSim:
-    """Run one (constellation x network x algorithm) scenario."""
+    """Run one (constellation x network x algorithm x workload) scenario."""
 
     def __init__(
         self,
@@ -68,17 +101,37 @@ class ConstellationSim:
         link_model: LinkModel | None = None,
         isl_link: LinkModel | None = None,
         isl_topology: ISLTopology | None = None,
+        workload: Workload | str | None = None,
         apply_fn=femnist_mlp_apply,
         init_fn=femnist_mlp_init,
     ):
         self.constellation = constellation
         self.stations = stations
         self.alg = algorithm
-        self.hw = hw or HardwareModel()
         self.cfg = cfg or SimConfig()
+        # Workload resolution. Passing `workload` is the first-class path;
+        # the `apply_fn`/`init_fn` kwargs keep the seed's FEMNIST-shaped
+        # contract working unchanged (classification loss + accuracy eval,
+        # paper-constant hardware).
+        if workload is not None:
+            self.workload = get_workload(workload)
+        else:
+            from repro.core.workload import classification_workload
+            self.workload = classification_workload(
+                "custom_classifier", init_fn, apply_fn,
+                model_bytes_override=C.MODEL_BYTES,
+                epoch_mflops_override=C.EPOCH_MFLOPS)
+        # Hardware: explicit > workload-derived > paper constants. The
+        # `femnist_mlp` workload's pinned cost makes all three identical
+        # on the default path.
+        if hw is not None:
+            self.hw = hw
+        elif workload is not None:
+            self.hw = HardwareModel.for_workload(self.workload)
+        else:
+            self.hw = HardwareModel()
         self.data = data
-        self.apply_fn = apply_fn
-        self.init_fn = init_fn
+        self.init_fn = self.workload.init_fn
         self.aw = access if access is not None else compute_access_windows(
             constellation, stations, horizon_s=self.cfg.horizon_s)
         # Comms: algorithms marked `isl=True` (or an explicit link model)
@@ -96,7 +149,10 @@ class ConstellationSim:
                 self.aw, iw, ground, isl_link or ground,
                 constellation=constellation, stations=stations)
         if self.cfg.train:
-            assert data is not None and data.n_clients == constellation.n_sats
+            if self.data is None:
+                self.data = self.workload.make_data(constellation.n_sats,
+                                                    seed=self.cfg.seed)
+            assert self.data.n_clients == constellation.n_sats
             # Jitted updaters are built lazily per power-of-two step bound so
             # a 45-step FedAvg round never pays for the 128-step worst case.
             self._updaters: dict[tuple[int, bool], object] = {}
@@ -105,7 +161,7 @@ class ConstellationSim:
         key = (bound, anchored)
         if key not in self._updaters:
             cu = make_client_update(
-                self.apply_fn, lr=self.cfg.lr,
+                loss_fn=self.workload.loss_fn, lr=self.cfg.lr,
                 batch_size=self.cfg.batch_size, max_steps=bound)
             axes = (0, 0 if anchored else None, 0, 0, 0, 0, None, 0)
             self._updaters[key] = jax.jit(jax.vmap(cu, in_axes=axes))
@@ -132,31 +188,62 @@ class ConstellationSim:
         spe = max(1, n_k // self.cfg.batch_size)
         return int(np.clip(epochs * spe, 1, self.cfg.max_steps))
 
-    def _train_round(self, global_params, plans, rng):
-        """Run vmapped ClientUpdate for the selected satellites."""
-        ks = [p.k for p in plans]
+    # ------------------------------------------------------------------ #
+    # Shared round-execution core (sync barrier AND async buffer flushes)
+    # ------------------------------------------------------------------ #
+    def _run_clients(self, global_params, ks: list[int], epochs: list[int],
+                     rng, anchors=None):
+        """Train-batch assembly + vmapped ClientUpdate for `ks`.
+
+        `anchors` is None for the synchronous barrier (everyone anchors on
+        the current global model, broadcast once) or a stacked pytree of
+        per-client anchor versions (FedBuff). Returns the stacked client
+        parameter returns.
+        """
+        steps_np = [self._steps_for(k, e) for k, e in zip(ks, epochs)]
+        steps = jnp.asarray(steps_np, jnp.int32)
         x = jnp.asarray(self.data.x[ks])
         y = jnp.asarray(self.data.y[ks])
         n = jnp.asarray(self.data.n[ks])
-        steps_np = [self._steps_for(p.k, p.epochs) for p in plans]
-        steps = jnp.asarray(steps_np, jnp.int32)
-        anchors = global_params
-        stacked0 = jax.tree.map(
-            lambda a: jnp.broadcast_to(a, (len(ks),) + a.shape), global_params)
+        anchored = anchors is not None
+        if anchored:
+            params0 = anchors
+        else:
+            anchors = global_params
+            params0 = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (len(ks),) + a.shape),
+                global_params)
         rngs = jax.random.split(rng, len(ks))
-        update = self._updater(self._bound(steps_np), anchored=False)
-        out = update(stacked0, anchors, x, y, n, steps,
-                     self.alg.strategy.prox_mu, rngs)
-        weights = jnp.asarray(self.data.n[ks], jnp.float32)
-        return out, weights
+        update = self._updater(self._bound(steps_np), anchored=anchored)
+        return update(params0, anchors, x, y, n, steps,
+                      self.alg.strategy.prox_mu, rngs)
+
+    def _finish_round(self, rounds: list[RoundRecord], curve: list,
+                      global_params, *, t_start: float, t_end: float,
+                      participants, epochs, idle_s, compute_s, comm_s,
+                      relays, staleness, relay_hops, comms_bytes,
+                      do_eval: bool) -> RoundRecord:
+        """Construct the RoundRecord, run the eval stage, and append."""
+        rec = RoundRecord(
+            idx=len(rounds), t_start=t_start, t_end=t_end,
+            participants=participants, epochs=epochs, idle_s=idle_s,
+            compute_s=compute_s, comm_s=comm_s, relays=relays,
+            staleness=staleness, relay_hops=relay_hops,
+            comms_bytes=comms_bytes,
+        )
+        if do_eval:
+            rec.accuracy = self._eval(global_params, t_end)
+            curve.append((rec.idx, t_end, rec.accuracy))
+        rounds.append(rec)
+        return rec
 
     def _eval(self, global_params, t: float) -> float:
         """Evaluation-stage client selection: same contact protocol.
 
         The eval batch is padded to the next power-of-two client count
-        (`_bound` idiom) with zero-weight rows, so `evaluate` — jitted on
-        the stacked shape — retraces per bucket instead of per distinct
-        participant count.
+        (`_bound` idiom) with zero-weight rows, so the workload's eval_fn
+        — jitted on the stacked shape — retraces per bucket instead of
+        per distinct participant count.
         """
         c = min(self.cfg.clients_per_round, self.constellation.n_sats)
         plans = self.alg.selector.select(
@@ -169,10 +256,10 @@ class ConstellationSim:
         n_eval = np.asarray(self.data.n_eval[ks_p]).copy()
         if pad:
             n_eval[len(ks):] = 0  # masked out of the weighted accuracy
-        acc = evaluate(self.apply_fn, global_params,
-                       jnp.asarray(self.data.x_eval[ks_p]),
-                       jnp.asarray(self.data.y_eval[ks_p]),
-                       jnp.asarray(n_eval))
+        acc = self.workload.eval_fn(global_params,
+                                    jnp.asarray(self.data.x_eval[ks_p]),
+                                    jnp.asarray(self.data.y_eval[ks_p]),
+                                    jnp.asarray(n_eval))
         return float(acc)
 
     # ------------------------------------------------------------------ #
@@ -201,13 +288,17 @@ class ConstellationSim:
 
             if cfg.train:
                 rng, sub = jax.random.split(rng)
-                stacked, weights = self._train_round(global_params, plans, sub)
+                ks = [p.k for p in plans]
+                stacked = self._run_clients(
+                    global_params, ks, [p.epochs for p in plans], sub)
+                weights = jnp.asarray(self.data.n[ks], jnp.float32)
                 global_params = alg.strategy.aggregate(
                     global_params, stacked, weights,
                     jnp.zeros((len(plans),), jnp.int32))
 
-            rec = RoundRecord(
-                idx=r, t_start=t, t_end=t_end,
+            self._finish_round(
+                rounds, curve, global_params,
+                t_start=t, t_end=t_end,
                 participants=[p.k for p in plans],
                 epochs=[p.epochs for p in plans],
                 idle_s=[max(0.0, (t_end - t)
@@ -221,12 +312,9 @@ class ConstellationSim:
                 staleness=[0] * len(plans),
                 relay_hops=[p.isl_hops for p in plans],
                 comms_bytes=[p.comm_bytes for p in plans],
+                do_eval=cfg.train and (r % cfg.eval_every == 0
+                                       or r == cfg.max_rounds - 1),
             )
-            if cfg.train and (r % cfg.eval_every == 0
-                              or r == cfg.max_rounds - 1):
-                rec.accuracy = self._eval(global_params, t_end)
-                curve.append((r, t_end, rec.accuracy))
-            rounds.append(rec)
             t = t_end
         return SimResult(alg.name, K, len(self.stations), rounds, curve)
 
@@ -286,25 +374,19 @@ class ConstellationSim:
             # --- aggregate the buffer ---------------------------------- #
             t_agg = tx_end
             staleness = np.array([version - b[1] for b in buffer], np.int32)
-            admit = staleness <= alg.strategy.max_staleness
-            weights = np.array(
-                [float(self.data.n[b[0]]) if cfg.train else 1.0
-                 for b in buffer], np.float32) * admit
+            ns = np.array([float(self.data.n[b[0]]) if cfg.train else 1.0
+                           for b in buffer], np.float32)
+            weights = buffer_weights(ns, staleness,
+                                     alg.strategy.max_staleness)
             if cfg.train:
                 ks = [b[0] for b in buffer]
                 anchors = jax.tree.map(
                     lambda *xs: jnp.stack(xs),
                     *[history[b[1]] for b in buffer])
                 rng, sub = jax.random.split(rng)
-                rngs = jax.random.split(sub, len(ks))
-                steps_np = [self._steps_for(b[0], b[2]) for b in buffer]
-                steps = jnp.asarray(steps_np, jnp.int32)
-                update = self._updater(self._bound(steps_np), anchored=True)
-                stacked = update(
-                    anchors, anchors,
-                    jnp.asarray(self.data.x[ks]), jnp.asarray(self.data.y[ks]),
-                    jnp.asarray(self.data.n[ks]), steps,
-                    alg.strategy.prox_mu, rngs)
+                stacked = self._run_clients(
+                    global_params, ks, [b[2] for b in buffer], sub,
+                    anchors=anchors)
                 global_params = alg.strategy.aggregate(
                     global_params, stacked, jnp.asarray(weights),
                     jnp.asarray(staleness))
@@ -313,33 +395,26 @@ class ConstellationSim:
             # The buffer-filling satellite re-downloads the *new* model.
             schedule_cycle(k, tx_end, version)
             # Prune history entries no in-flight client still anchors on.
-            outstanding = [e[2] for e in heap]
-            keep_from = min(outstanding, default=version)
-            for v in list(history):
-                if v < keep_from:
-                    del history[v]
+            prune_history(history, (e[2] for e in heap), version)
 
-            rec = RoundRecord(
-                idx=len(rounds), t_start=last_agg_t, t_end=t_agg,
+            self._finish_round(
+                rounds, curve, global_params,
+                t_start=last_agg_t, t_end=t_agg,
                 participants=[b[0] for b in buffer],
                 epochs=[b[2] for b in buffer],
                 # Async clients only idle while a pass is out of reach after
                 # the duty-cycle cap ends; within the buffer span their time
                 # is train_span + comms.
-                idle_s=[max(0.0, (b[6] - b[3]) - b[4] - b[5]) for b in buffer],
+                idle_s=[max(0.0, (b[6] - b[3]) - b[4] - b[5])
+                        for b in buffer],
                 compute_s=[b[4] for b in buffer],
                 comm_s=[b[5] for b in buffer],
                 relays=[-1] * len(buffer),
                 staleness=staleness.tolist(),
                 relay_hops=[0] * len(buffer),
                 comms_bytes=[2.0 * hw.model_bytes] * len(buffer),
+                do_eval=cfg.train and (len(rounds) % cfg.eval_every == 0),
             )
-            if cfg.train and (len(rounds) % cfg.eval_every == 0):
-                rec.accuracy = self._eval(global_params, t_agg)
-                curve.append((len(rounds), t_agg, rec.accuracy))
-            rounds.append(rec)
             last_agg_t = t_agg
             buffer = []
         return SimResult(alg.name, K, len(self.stations), rounds, curve)
-
-
