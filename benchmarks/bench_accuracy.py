@@ -15,7 +15,8 @@ ALGS = ("fedavg", "fedprox", "fedbuff", "fedavg_sched", "fedprox_sched",
         "fedprox_sched_v2")
 
 
-def run(quick: bool = True, rounds: int = 150, workload: str | None = None):
+def run(quick: bool = True, rounds: int = 150, workload: str | None = None,
+        execution: str | None = None):
     consts = [(2, 5), (5, 10)] if quick else \
         [(c, s) for c in (1, 2, 5, 10) for s in (2, 5, 10)]
     stations = (1, 5, 13) if quick else (1, 2, 3, 5, 10, 13)
@@ -24,6 +25,8 @@ def run(quick: bool = True, rounds: int = 150, workload: str | None = None):
         algs = ("fedavg", "fedprox", "fedbuff", "fedavg_sched",
                 "fedprox_sched", "fedprox_sched_v2")
     wtag = f"/{workload}" if workload else ""
+    if execution:
+        wtag += f"@{execution}"
     rows, acc = [], {}
     for alg in algs:
         # Async buffer-fills are ~10x shorter than sync round barriers;
@@ -34,7 +37,7 @@ def run(quick: bool = True, rounds: int = 150, workload: str | None = None):
             for g in stations:
                 res = run_scenario(alg, cl, sp, g, rounds=alg_rounds,
                                    train=True, eval_every=10,
-                                   workload=workload)
+                                   workload=workload, execution=execution)
                 a = res.max_accuracy
                 acc[(alg, cl, sp, g)] = a
                 rows.append((f"max_acc{wtag}/{alg}/c{cl}s{sp}/g{g}",
@@ -71,9 +74,12 @@ def main(argv=None):
     ap.add_argument("--workload", default=None, choices=workload_names(),
                     help="train a registry workload instead of the "
                          "seed's femnist_mlp")
+    ap.add_argument("--execution", default=None, choices=("host", "mesh"),
+                    help="client-update execution mode (default: the "
+                         "workload's declared mode)")
     args = ap.parse_args(argv)
     emit(run(quick=not args.full, rounds=args.rounds,
-             workload=args.workload))
+             workload=args.workload, execution=args.execution))
 
 
 if __name__ == "__main__":

@@ -11,14 +11,15 @@ import argparse
 from benchmarks.common import emit, run_scenario
 
 
-def run(train: bool = True, rounds: int = 120, stations=(1, 3, 5, 13)):
+def run(train: bool = True, rounds: int = 120, stations=(1, 3, 5, 13),
+        execution: str | None = None):
     rows = []
     speedups = {}
     for g in stations:
         base = run_scenario("fedavg", 5, 10, g, rounds=rounds, train=train,
-                            eval_every=10)
+                            eval_every=10, execution=execution)
         sched = run_scenario("fedavg_sched", 5, 10, g, rounds=rounds,
-                             train=train, eval_every=10)
+                             train=train, eval_every=10, execution=execution)
         days_b = base.total_time_s / 86400
         days_s = sched.total_time_s / 86400
         sp = days_b / max(days_s, 1e-9)

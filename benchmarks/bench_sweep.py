@@ -30,7 +30,8 @@ ISL_SUITE = ("fedavg_intracc_isl", "fedprox_intracc_isl")
 
 
 def run(rounds: int = 20, quick: bool = False, isl: bool = False,
-        horizon_s: float = HORIZON_S, workload: str | None = None):
+        horizon_s: float = HORIZON_S, workload: str | None = None,
+        train: bool = False, execution: str | None = None):
     algs = ALG_SUITE[:4] if quick else ALG_SUITE
     if isl:
         algs = algs + ISL_SUITE
@@ -40,6 +41,13 @@ def run(rounds: int = 20, quick: bool = False, isl: bool = False,
     # Non-default workloads re-price every scenario (model bytes / epoch
     # FLOPs from the workload's derived cost model) and tag the row names.
     wtag = f"/{workload}" if workload else ""
+    if execution:
+        # The execution axis only changes *how* gradients run (host vmap
+        # vs mesh collective); tagging timing-only rows with it would
+        # claim measurements that never happened.
+        if not train:
+            raise ValueError("execution= requires train=True")
+        wtag += f"@{execution}"
     rows = []
     n_run = n_skip = 0
     for alg in algs:
@@ -53,7 +61,8 @@ def run(rounds: int = 20, quick: bool = False, isl: bool = False,
                         continue
                     res = run_scenario(alg, cl, sp, g, rounds=rounds,
                                        horizon_s=horizon_s,
-                                       workload=workload)
+                                       workload=workload, train=train,
+                                       execution=execution)
                     derived = round(res.mean_idle_per_round_s / 3600, 3)
                     if alg.endswith("_isl"):
                         derived = (f"idle_h={derived};"
@@ -80,11 +89,20 @@ def main(argv=None):
     ap.add_argument("--workload", default=None, choices=workload_names(),
                     help="re-price the sweep for a registry workload "
                          "(default: the seed's femnist_mlp constants)")
+    ap.add_argument("--train", action="store_true",
+                    help="run real gradients (default: timing-only)")
+    ap.add_argument("--execution", default=None, choices=("host", "mesh"),
+                    help="client-update execution mode for --train runs "
+                         "(default: the workload's declared mode)")
     args = ap.parse_args(argv)
+    if args.execution and not args.train:
+        ap.error("--execution changes how gradients run; pair it with "
+                 "--train (a timing-only sweep would mislabel its rows)")
     horizon_s = (args.horizon_days * 86400.0 if args.horizon_days
                  else HORIZON_S)
     emit(run(rounds=args.rounds, quick=args.quick, isl=args.isl,
-             horizon_s=horizon_s, workload=args.workload))
+             horizon_s=horizon_s, workload=args.workload,
+             train=args.train, execution=args.execution))
 
 
 if __name__ == "__main__":

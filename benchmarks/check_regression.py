@@ -1,0 +1,132 @@
+"""Cross-PR round-duration regression check against BENCH_sweep.json.
+
+The committed artifact is the perf trajectory's baseline: this script
+re-runs a small deterministic sweep (the CI smoke grid — quick Table-1
+axes + ISL variants, short horizon) and fails when any scenario's mean
+round duration regresses more than `--threshold` (default 10%) against
+the committed numbers. Round durations are *simulated* quantities —
+orbital timing arithmetic, not wall clock — so they are reproducible
+across machines and any drift is a real behaviour change (selection,
+comms pricing, or event-loop edits), not noise.
+
+  python -m benchmarks.check_regression                  # CI gate
+  python -m benchmarks.check_regression --write-baseline # refresh + commit
+
+`--write-baseline` merges the trend suite into BENCH_sweep.json without
+clobbering suites written by `benchmarks.run` (whose sweep768 /
+round_duration rows are also compared when both sides carry them).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# Suites whose row values are durations (hours): higher is a regression.
+DURATION_SUITES = ("sweep_ci", "sweep768", "round_duration")
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_sweep.json")
+# CI trend-grid knobs — must stay identical between the committed
+# baseline and the checking run for rows to be comparable.
+TREND_ROUNDS = 2
+TREND_HORIZON_DAYS = 4.0
+
+
+def compare(baseline: dict, current: dict, threshold: float = 0.10,
+            atol: float = 1e-3) -> list[str]:
+    """Regression report: rows in both artifacts whose duration grew by
+    more than `threshold` (relative) AND `atol` (absolute hours)."""
+    regressions = []
+    for suite in DURATION_SUITES:
+        b = baseline.get("suites", {}).get(suite) or {}
+        c = current.get("suites", {}).get(suite) or {}
+        bmap = {r[0]: r[1] for r in b.get("rows", [])}
+        for row in c.get("rows", []):
+            name, val = row[0], row[1]
+            if name.endswith("scenarios_run"):
+                continue                      # a count, not a duration
+            base = bmap.get(name)
+            if not isinstance(base, (int, float)) or \
+                    not isinstance(val, (int, float)):
+                continue
+            if base <= 0:
+                continue                      # skipped / empty scenario
+            if val > base * (1.0 + threshold) and (val - base) > atol:
+                regressions.append(
+                    f"{suite}/{name}: {base} -> {val} h "
+                    f"(+{(val / base - 1.0) * 100.0:.1f}%)")
+    return regressions
+
+
+def overlap_count(baseline: dict, current: dict) -> int:
+    n = 0
+    for suite in DURATION_SUITES:
+        b = {r[0] for r in (baseline.get("suites", {}).get(suite) or {})
+             .get("rows", [])}
+        c = {r[0] for r in (current.get("suites", {}).get(suite) or {})
+             .get("rows", [])}
+        n += len(b & c)
+    return n
+
+
+def generate_trend_suite() -> dict:
+    """Run the deterministic CI trend grid (imports jax lazily)."""
+    from benchmarks import bench_sweep
+    rows = bench_sweep.run(rounds=TREND_ROUNDS, quick=True, isl=True,
+                           horizon_s=TREND_HORIZON_DAYS * 86400.0)
+    return {"schema": 1, "suites": {"sweep_ci": {
+        "rounds": TREND_ROUNDS,
+        "horizon_days": TREND_HORIZON_DAYS,
+        "rows": [list(r) for r in rows],
+    }}}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--threshold", type=float, default=0.10)
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="merge a fresh trend suite into the baseline "
+                         "artifact instead of checking")
+    args = ap.parse_args(argv)
+
+    current = generate_trend_suite()
+    path = args.baseline
+
+    if args.write_baseline:
+        merged = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                merged = json.load(f)
+        merged.setdefault("schema", 1)
+        merged.setdefault("suites", {})
+        merged["suites"]["sweep_ci"] = current["suites"]["sweep_ci"]
+        with open(path, "w") as f:
+            json.dump(merged, f, indent=1)
+        print(f"# wrote trend baseline to {os.path.normpath(path)}")
+        return 0
+
+    if not os.path.exists(path):
+        print(f"# no baseline at {os.path.normpath(path)}; skipping "
+              "(run --write-baseline and commit the artifact)")
+        return 0
+    with open(path) as f:
+        baseline = json.load(f)
+    n = overlap_count(baseline, current)
+    if n == 0:
+        print("# baseline shares no duration rows with this run; skipping")
+        return 0
+    regressions = compare(baseline, current, threshold=args.threshold)
+    if regressions:
+        print(f"# ROUND-DURATION REGRESSIONS (> {args.threshold:.0%} "
+              f"vs committed baseline):")
+        for r in regressions:
+            print(f"#   {r}")
+        return 1
+    print(f"# {n} duration rows within {args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,6 +21,7 @@ from repro.comms import (                                           # noqa: E402
     compute_isl_windows,
 )
 from repro.core import ALGORITHMS, get_workload                     # noqa: E402
+from repro.core.timing import HardwareModel                         # noqa: E402
 from repro.orbits import (                                          # noqa: E402
     WalkerStar,
     compute_access_windows,
@@ -78,13 +79,30 @@ def isl_windows(clusters: int, sats: int, horizon_s: float = HORIZON_S):
 
 
 @functools.lru_cache(maxsize=256)
-def contact_plan(clusters: int, sats: int, n_stations: int,
-                 horizon_s: float = HORIZON_S):
-    """ConstantRate ContactPlan (ground + ISL) for one scenario."""
+def _base_contact_plan(clusters: int, sats: int, n_stations: int,
+                       horizon_s: float = HORIZON_S):
+    """Default-rate ContactPlan (ground + ISL) for one scenario — the
+    expensive, workload-independent geometry."""
     return build_contact_plan(
         access(clusters, sats, n_stations, horizon_s),
         isl_windows(clusters, sats, horizon_s),
         ConstantRate())
+
+
+@functools.lru_cache(maxsize=256)
+def contact_plan(clusters: int, sats: int, n_stations: int,
+                 horizon_s: float = HORIZON_S,
+                 link_mbps: float | None = None):
+    """ConstantRate ContactPlan for one scenario, priced at `link_mbps`.
+
+    The window geometry is cached once per scenario; per-workload link
+    rates re-price it (`ContactPlan.rerate`). `link_mbps=None` keeps the
+    paper-constant default — bitwise the seed's plan.
+    """
+    base = _base_contact_plan(clusters, sats, n_stations, horizon_s)
+    if link_mbps is None:
+        return base
+    return base.rerate(ConstantRate(link_mbps))
 
 
 _DATA_CACHE: dict = {}
@@ -102,19 +120,32 @@ def data_for(n_sats: int, seed: int = 0, workload: str = DEFAULT_WORKLOAD):
 def run_scenario(alg: str, clusters: int, sats: int, n_stations: int,
                  *, rounds: int = 30, train: bool = False, seed: int = 0,
                  eval_every: int = 10, horizon_s: float = HORIZON_S,
-                 workload: str | None = None):
+                 workload: str | None = None, execution: str | None = None):
     """Run one sweep cell. `workload=None` is the seed's FEMNIST-MLP path
     (bitwise); naming a registry workload swaps the model + loss + data
-    AND the hardware cost model (comms bytes / epoch times) it implies."""
+    AND the hardware cost model (comms bytes / epoch times) it implies.
+    `execution` dispatches client updates ("host" | "mesh" | None = the
+    workload's declared mode)."""
     c = WalkerStar(clusters, sats)
     aw = access(clusters, sats, n_stations, horizon_s)
     algorithm = ALGORITHMS[alg]
-    plan = (contact_plan(clusters, sats, n_stations, horizon_s)
-            if algorithm.isl else None)
+    plan = None
+    if algorithm.isl:
+        # The cached plan's geometry is workload-independent, its rates
+        # are not: re-rate with the workload's HardwareModel so a slower
+        # radio (Workload.link_mbps) shrinks every window's byte volume
+        # (ROADMAP "per-workload link budgets").
+        link = (HardwareModel.for_workload(workload).link_mbps
+                if workload is not None else None)
+        if link == HardwareModel().link_mbps:
+            link = None          # default platform: share the base plan
+        plan = contact_plan(clusters, sats, n_stations, horizon_s, link)
     cfg = SimConfig(max_rounds=rounds, horizon_s=horizon_s, train=train,
                     eval_every=eval_every, seed=seed)
     # The engine derives HardwareModel.for_workload(workload) itself.
     kwargs = {} if workload is None else {"workload": workload}
+    if execution is not None:
+        kwargs["execution"] = execution
     sim = ConstellationSim(
         c, station_subnetwork(n_stations), algorithm,
         data=(data_for(c.n_sats, seed, workload or DEFAULT_WORKLOAD)

@@ -27,16 +27,23 @@ from benchmarks import (
 )
 from benchmarks.common import emit
 
+# Every suite takes (full, execution); suites that never run gradients
+# ignore the execution axis (it only changes how gradients run). The
+# Table-1 sweep is timing-only by default, so requesting an execution
+# mode switches it to real training (otherwise the rows would be
+# mislabelled host numbers).
 SUITES = {
-    "kernels": lambda full: bench_kernels.run(),
-    "round_duration": lambda full: bench_round_duration.run(quick=not full),
-    "idle": lambda full: bench_idle.run(quick=not full),
-    "speedup": lambda full: bench_speedup.run(
-        train=True, rounds=150 if full else 100),
-    "accuracy": lambda full: bench_accuracy.run(
-        quick=not full, rounds=150 if full else 100),
-    "sweep768": lambda full: bench_sweep.run(quick=not full),
-    "roofline": lambda full: bench_roofline.run(),
+    "kernels": lambda full, ex: bench_kernels.run(),
+    "round_duration": lambda full, ex: bench_round_duration.run(
+        quick=not full),
+    "idle": lambda full, ex: bench_idle.run(quick=not full),
+    "speedup": lambda full, ex: bench_speedup.run(
+        train=True, rounds=150 if full else 100, execution=ex),
+    "accuracy": lambda full, ex: bench_accuracy.run(
+        quick=not full, rounds=150 if full else 100, execution=ex),
+    "sweep768": lambda full, ex: bench_sweep.run(
+        quick=not full, train=ex is not None, execution=ex),
+    "roofline": lambda full, ex: bench_roofline.run(),
 }
 
 DEFAULT_JSON = os.path.join(os.path.dirname(__file__), "..",
@@ -49,10 +56,13 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None, choices=list(SUITES) + [None])
     ap.add_argument("--json", default=DEFAULT_JSON,
                     help="machine-readable artifact path ('' disables)")
+    ap.add_argument("--execution", default=None, choices=("host", "mesh"),
+                    help="client-update execution mode for training suites")
     args = ap.parse_args(argv)
 
     artifact: dict = {"schema": 1, "generated_unix": round(time.time(), 1),
                       "full": bool(args.full), "only": args.only,
+                      "execution": args.execution,
                       "suites": {}}
     names = [args.only] if args.only else list(SUITES)
     t_total = time.time()
@@ -60,7 +70,7 @@ def main(argv=None) -> None:
         print(f"# ==== {name} ====")
         t0 = time.time()
         try:
-            rows = SUITES[name](args.full)
+            rows = SUITES[name](args.full, args.execution)
             emit(rows)
             wall = time.time() - t0
             print(f"# {name}: {len(rows)} rows in {wall:.1f}s")
@@ -81,6 +91,18 @@ def main(argv=None) -> None:
         # pass --json explicitly to write one anyway.
         print("# --only run: skipping default BENCH_sweep.json write")
     elif args.json:
+        # Merge over an existing artifact: suites this run didn't execute
+        # (notably the committed `sweep_ci` baseline the CI regression
+        # gate compares against — benchmarks/check_regression.py) must
+        # survive a refresh of the others.
+        if os.path.exists(args.json):
+            try:
+                with open(args.json) as f:
+                    prior = json.load(f).get("suites", {})
+                for name, suite in prior.items():
+                    artifact["suites"].setdefault(name, suite)
+            except (json.JSONDecodeError, AttributeError):
+                pass  # corrupt artifact: overwrite it
         with open(args.json, "w") as f:
             json.dump(artifact, f, indent=1)
         print(f"# wrote {os.path.normpath(args.json)}")

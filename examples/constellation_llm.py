@@ -35,6 +35,9 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--max-steps", type=int, default=16)
     ap.add_argument("--alg", default="fedavg_sched", choices=sorted(ALGORITHMS))
+    ap.add_argument("--execution", default=None, choices=("host", "mesh"),
+                    help="client-update execution: vmapped host loop or "
+                         "cluster-as-collective mesh dispatch")
     args = ap.parse_args()
 
     wl = lm_workload(get_config(args.arch).reduced(), seq_len=args.seq,
@@ -52,9 +55,11 @@ def main():
                     batch_size=args.batch, lr=args.lr, eval_every=1,
                     max_steps=args.max_steps)
     sim = ConstellationSim(c, station_subnetwork(3), ALGORITHMS[args.alg],
-                           workload=wl, hw=hw, cfg=cfg, access=aw)
+                           workload=wl, hw=hw, cfg=cfg, access=aw,
+                           execution=args.execution)
     res = sim.run()
 
+    print(f"execution mode: {res.execution}")
     for rec in res.rounds:
         acc = f"{rec.accuracy:.4f}" if rec.accuracy is not None else "  -   "
         print(f"round {rec.idx}: day {rec.t_end/86400:5.2f}  "

@@ -153,6 +153,36 @@ class ContactPlan:
     def isl_edges_of(self, k: int) -> list[int]:
         return self.neighbors.get(k, [])
 
+    # ----------------------------------------------------------- re-rate --
+    def rerate(self, ground_link: LinkModel,
+               isl_link: LinkModel | None = None) -> "ContactPlan":
+        """This plan's geometry, re-priced by different link models.
+
+        Contact windows are orbital facts and survive unchanged; only the
+        per-window achievable rates are recomputed. This is what lets a
+        cached plan be shared across workloads: the expensive part (window
+        extraction) is workload-independent, while the rates must follow
+        each workload's `HardwareModel` (a heavier model or a slower radio
+        can make an ISL window too short to fit a transfer). Only
+        geometry-free links can be re-priced without re-propagating; pass
+        a `LinkBudget` through `build_contact_plan` instead.
+        """
+        isl_link = isl_link or ground_link
+        if not (ground_link.geometry_free and isl_link.geometry_free):
+            raise ValueError("rerate() only supports geometry-free links; "
+                             "rebuild with build_contact_plan for a "
+                             "range-dependent LinkBudget")
+        g_rate = float(ground_link.rate_bps())
+        i_rate = float(isl_link.rate_bps())
+        ground = [_EdgeWindows(ew.starts, ew.ends,
+                               np.full(len(ew.starts), g_rate))
+                  for ew in self.ground]
+        isl = {e: _EdgeWindows(ew.starts, ew.ends,
+                               np.full(len(ew.starts), i_rate))
+               for e, ew in self.isl.items()}
+        return ContactPlan(n_sats=self.n_sats, ground=ground, isl=isl,
+                           neighbors=self.neighbors, horizon_s=self.horizon_s)
+
 
 # ---------------------------------------------------------------- build --
 def _midpoint_rates(link: LinkModel, ranges_m: np.ndarray) -> np.ndarray:

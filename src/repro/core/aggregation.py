@@ -43,6 +43,23 @@ def weighted_average(stacked: Pytree, weights: jax.Array,
     return jax.tree.map(leaf_avg, stacked)
 
 
+def staleness_discount(staleness: jax.Array) -> jax.Array:
+    """FedBuff's staleness discount s(tau) = 1/sqrt(1+tau).
+
+    Shared by the host event loop (`weighted_delta_update`) and the mesh
+    round step (`repro.launch.fl_round`), so both execution paths apply
+    identical weight semantics to buffered updates.
+    """
+    return 1.0 / jnp.sqrt(1.0 + jnp.asarray(staleness, jnp.float32))
+
+
+def admission_weights(ns, staleness, max_staleness: int):
+    """FedBuff admission rule: updates staler than the bound get zero
+    weight. Works on numpy or jax arrays (`ns` are raw sample counts)."""
+    admit = staleness <= max_staleness
+    return ns * admit
+
+
 def weighted_delta_update(global_params: Pytree, stacked: Pytree,
                           weights: jax.Array, staleness: jax.Array,
                           server_lr: float = 1.0) -> Pytree:
@@ -53,12 +70,41 @@ def weighted_delta_update(global_params: Pytree, stacked: Pytree,
     with the staleness discount s(tau) = 1/sqrt(1+tau) of the FedBuff paper.
     Weights of inadmissible (over-stale) clients must already be zeroed.
     """
-    disc = 1.0 / jnp.sqrt(1.0 + jnp.asarray(staleness, jnp.float32))
+    disc = staleness_discount(staleness)
     w = normalized_weights(jnp.asarray(weights, jnp.float32) * disc)
 
     def leaf(gl, xs):
         wb = w.reshape((-1,) + (1,) * gl.ndim).astype(gl.dtype)
         delta = jnp.sum(wb * (xs - gl[None]), axis=0)
+        return gl + jnp.asarray(server_lr, gl.dtype) * delta
+
+    return jax.tree.map(leaf, global_params, stacked)
+
+
+def masked_delta_allreduce(global_params: Pytree, stacked: Pytree,
+                           weights: jax.Array, axis_name: str,
+                           server_lr: float = 1.0) -> Pytree:
+    """Mesh-native form of the server update, for shard_map bodies whose
+    shards each hold a *block* of clients (leading local axis on every
+    `stacked` leaf; `weights` is the matching local (P_local,) block).
+
+        w <- w + lr_g * sum_k (w_k / sum_j w_j) * (p_k - w)
+
+    The weight total is psummed over `axis_name`, so masking (weight 0)
+    and the empty-round guard (total 0 keeps the old model) are global
+    across the mesh. With lr_g=1 and weights summing over participants
+    this equals `weighted_average(stacked, weights)` (Eq. 1); with
+    discounted weights and lr_g it equals `weighted_delta_update` —
+    one collective covers the sync barrier and FedBuff flushes.
+    """
+    weights = jnp.asarray(weights, jnp.float32)
+    total = jax.lax.psum(jnp.sum(weights), axis_name)
+    scale = jnp.where(total > 0, weights / jnp.maximum(total, 1e-12), 0.0)
+
+    def leaf(gl, xs):
+        wb = scale.reshape((-1,) + (1,) * gl.ndim).astype(gl.dtype)
+        part = jnp.sum(wb * (xs - gl[None]), axis=0)
+        delta = jax.lax.psum(part, axis_name)
         return gl + jnp.asarray(server_lr, gl.dtype) * delta
 
     return jax.tree.map(leaf, global_params, stacked)

@@ -91,10 +91,32 @@ def make_client_update(
     return client_update
 
 
+def vmapped_client_update(loss_fn: Callable, *, lr: float = 0.05,
+                          batch_size: int = 32, max_steps: int = 64,
+                          anchored: bool = False) -> Callable:
+    """vmap ClientUpdate over a stacked client axis (not jitted).
+
+    The one builder behind both execution paths: `sim.engine` jits it for
+    the vmapped host loop, `launch.fl_round` closes over it inside a
+    shard_map body (each mesh shard vmaps its local block of clients), so
+    the per-client math is the same function object in either mode.
+
+    `anchored=False` broadcasts one shared anchor (the sync barrier);
+    `anchored=True` maps per-client anchors (FedBuff historical versions).
+    """
+    cu = make_client_update(loss_fn=loss_fn, lr=lr, batch_size=batch_size,
+                            max_steps=max_steps)
+    axes = (0, 0 if anchored else None, 0, 0, 0, 0, None, 0)
+    return jax.vmap(cu, in_axes=axes)
+
+
 def make_batched_client_update(apply_fn, lr=0.05, batch_size=32, max_steps=64):
-    """vmap ClientUpdate over a stacked client axis and jit the result."""
-    cu = make_client_update(apply_fn, lr, batch_size, max_steps)
-    return jax.jit(jax.vmap(cu, in_axes=(0, None, 0, 0, 0, 0, None, 0)))
+    """Seed-contract convenience: jitted vmapped ClientUpdate for an
+    image-classifier (init, apply) pair — `vmapped_client_update` with
+    the cross-entropy data term."""
+    return jax.jit(vmapped_client_update(
+        classification_loss(apply_fn), lr=lr, batch_size=batch_size,
+        max_steps=max_steps))
 
 
 @functools.partial(jax.jit, static_argnames=("apply_fn",))

@@ -59,14 +59,20 @@ class HardwareModel:
         `model_bytes` / `epoch_mflops` come from the workload's derived
         cost model (parameter tree + architecture config), so comms times
         and epoch times scale with the model actually being federated.
-        Compute/link knobs keep the paper's section-5 platform unless
-        overridden. For `femnist_mlp` — whose cost is pinned to the paper
-        constants — this returns exactly `HardwareModel()`.
+        Compute/link knobs keep the paper's section-5 platform unless the
+        workload pins its own (`Workload.link_mbps`/`gflops`) or the
+        caller overrides (caller wins). For `femnist_mlp` — whose cost is
+        pinned to the paper constants — this returns exactly
+        `HardwareModel()`.
         """
         from repro.core.workload import get_workload
         wl = get_workload(workload)
         kwargs = dict(epoch_mflops=float(wl.epoch_mflops),
                       model_bytes=int(wl.model_bytes))
+        if gflops is None:
+            gflops = wl.gflops
+        if link_mbps is None:
+            link_mbps = wl.link_mbps
         if gflops is not None:
             kwargs["gflops"] = gflops
         if link_mbps is not None:

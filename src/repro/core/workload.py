@@ -59,6 +59,19 @@ class Workload:
     make_data: Callable                  # (n_clients, seed=...) -> dataset
     sample_shape: tuple[int, ...]        # batch schema: per-sample x shape
     sample_dtype: str = "float32"        #   ... and dtype
+    # --- execution descriptor -------------------------------------------
+    # How the engine runs this workload's client updates:
+    #   "host" — the reference path: one jitted vmap over stacked clients,
+    #            aggregation as a host-side weighted reduction;
+    #   "mesh" — cluster-as-collective: clients are pod slots on a mesh
+    #            axis, local SGD runs inside shard_map and aggregation is
+    #            a participation-masked psum (`launch.fl_round`).
+    # `ConstellationSim(..., execution=...)` overrides per run.
+    execution: str = "host"
+    mesh_axis: str = "pod"               # mesh axis carrying client pods
+    # Batch-key ranks for the launch-style dict-batch contract (leading
+    # dim sharded over `mesh_axis`); None = the engine's (x, y) schema.
+    mesh_batch_dims: dict[str, int] | None = None
     # --- cost model -----------------------------------------------------
     # FLOPs for one training sample (fwd+bwd). Either an explicit number
     # computed from the architecture dims, or a per-parameter multiplier
@@ -73,8 +86,22 @@ class Workload:
     # to the seed's HardwareModel defaults.
     model_bytes_override: int | None = None
     epoch_mflops_override: float | None = None
+    # Platform overrides: a workload may pin its own radio/compute instead
+    # of the paper's section-5 satellite (e.g. a heavy LM flown on a
+    # high-gain bus). `HardwareModel.for_workload` and the benchmark
+    # contact-plan cache (`benchmarks.common`) honour these, so cached
+    # ConstantRate plans are re-rated per workload.
+    link_mbps: float | None = None
+    gflops: float | None = None
 
     # ------------------------------------------------------------------ #
+    def with_execution(self, execution: str) -> "Workload":
+        """This workload, dispatched to `execution` ("host" | "mesh")."""
+        if execution not in ("host", "mesh"):
+            raise ValueError(f"unknown execution mode {execution!r}; "
+                             "expected 'host' or 'mesh'")
+        return dataclasses.replace(self, execution=execution)
+
     @functools.cached_property
     def n_params(self) -> int:
         """Parameter count, via shape-only tracing of `init_fn` (no FLOPs)."""
@@ -204,6 +231,8 @@ def lm_workload(cfg, *, name: str | None = None, seq_len: int = 32,
             eval_samples=eval_samples),
         sample_shape=(seq_len + 1,),
         sample_dtype="int32",
+        mesh_batch_dims={"tokens": 2},
+
         train_flops_per_param=6.0 * (seq_len + 1),
         samples_per_epoch=samples_per_client,
         bytes_per_param=int(bytes_per_param),

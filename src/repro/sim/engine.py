@@ -17,9 +17,21 @@ Couples four layers:
 
 Synchronous algorithms (FedAvg/FedProx families) run the round-barrier
 loop of Algorithms 1-2; FedBuff runs the asynchronous buffered event loop
-of Algorithm 3. Both share one round-execution core (`_run_clients` +
+of Algorithm 3. Both share one round-execution core (`_train_round` +
 `_finish_round`) and produce the paper's three metrics per round:
 accuracy, round duration, and per-satellite idle time.
+
+`_train_round` dispatches on the execution mode (a `Workload` capability,
+overridable per run with `ConstellationSim(..., execution=...)`):
+
+  * "host" — the reference path: one jitted vmap over stacked clients,
+    then `Strategy.aggregate` as a host-side weighted reduction;
+  * "mesh" — cluster-as-collective (`launch.fl_round.make_mesh_round_step`):
+    each participating satellite is a pod slot on a mesh axis, local SGD
+    runs inside shard_map, and aggregation is a participation-masked psum.
+    Covers every strategy in the (weighted-average / staleness-discounted
+    weighted-delta, server-lr) family — i.e. the whole registered suite;
+    a custom `Strategy.aggregate` outside that family must run on "host".
 """
 from __future__ import annotations
 
@@ -34,7 +46,8 @@ import numpy as np
 from repro.comms.contact_plan import ContactPlan, build_contact_plan
 from repro.comms.isl import ISLTopology, compute_isl_windows
 from repro.comms.links import ConstantRate, LinkModel
-from repro.core.client import make_client_update
+from repro.core.aggregation import admission_weights
+from repro.core.client import vmapped_client_update
 from repro.core.spaceify import SpaceifiedAlgorithm
 from repro.core.timing import HardwareModel
 from repro.core.workload import Workload, get_workload
@@ -57,6 +70,8 @@ class SimConfig:
     max_steps: int = 128             # static bound on local SGD steps/round
     seed: int = 0
     train: bool = True               # False: timing-only sweep (no gradients)
+    record_params: bool = False      # keep a per-round global-params history
+                                     # (parity harness; costs host memory)
 
 
 def buffer_weights(ns: np.ndarray, staleness: np.ndarray,
@@ -66,8 +81,7 @@ def buffer_weights(ns: np.ndarray, staleness: np.ndarray,
     `ns` are the raw aggregation weights (client sample counts), `staleness`
     the global-version lag of each buffered update.
     """
-    admit = staleness <= max_staleness
-    return ns * admit
+    return admission_weights(ns, staleness, max_staleness)
 
 
 def prune_history(history: dict, outstanding: Iterable[int],
@@ -102,6 +116,7 @@ class ConstellationSim:
         isl_link: LinkModel | None = None,
         isl_topology: ISLTopology | None = None,
         workload: Workload | str | None = None,
+        execution: str | None = None,
         apply_fn=femnist_mlp_apply,
         init_fn=femnist_mlp_init,
     ):
@@ -148,6 +163,25 @@ class ConstellationSim:
             self.plan = build_contact_plan(
                 self.aw, iw, ground, isl_link or ground,
                 constellation=constellation, stations=stations)
+        # Execution mode: per-run override > workload capability.
+        self.execution = execution or self.workload.execution
+        if self.execution not in ("host", "mesh"):
+            raise ValueError(f"unknown execution mode {self.execution!r}; "
+                             "expected 'host' or 'mesh'")
+        if self.execution == "mesh":
+            # The collective realizes exactly the weighted-average /
+            # discounted-delta family; a custom Strategy.aggregate would
+            # be silently bypassed, so refuse instead.
+            from repro.core.strategies.base import Strategy
+            from repro.core.strategies.fedbuff import FedBuffSat
+            agg = type(algorithm.strategy).aggregate
+            if agg not in (Strategy.aggregate, FedBuffSat.aggregate):
+                raise ValueError(
+                    f"strategy {algorithm.strategy.name!r} overrides "
+                    "aggregate() outside the weighted-average / "
+                    "staleness-discounted-delta family; mesh execution "
+                    "would bypass it — run with execution='host'")
+        self._params_hist: list = []
         if self.cfg.train:
             if self.data is None:
                 self.data = self.workload.make_data(constellation.n_sats,
@@ -156,16 +190,38 @@ class ConstellationSim:
             # Jitted updaters are built lazily per power-of-two step bound so
             # a 45-step FedAvg round never pays for the 128-step worst case.
             self._updaters: dict[tuple[int, bool], object] = {}
+            # Mesh-path caches: one client mesh per pod-axis size, one
+            # jitted collective round step per (step bound, axis size).
+            self._meshes: dict[int, object] = {}
+            self._mesh_steps: dict[tuple[int, int], object] = {}
 
     def _updater(self, bound: int, anchored: bool):
         key = (bound, anchored)
         if key not in self._updaters:
-            cu = make_client_update(
-                loss_fn=self.workload.loss_fn, lr=self.cfg.lr,
-                batch_size=self.cfg.batch_size, max_steps=bound)
-            axes = (0, 0 if anchored else None, 0, 0, 0, 0, None, 0)
-            self._updaters[key] = jax.jit(jax.vmap(cu, in_axes=axes))
+            self._updaters[key] = jax.jit(vmapped_client_update(
+                self.workload.loss_fn, lr=self.cfg.lr,
+                batch_size=self.cfg.batch_size, max_steps=bound,
+                anchored=anchored))
         return self._updaters[key]
+
+    def _client_mesh(self, n_clients: int):
+        from repro.sharding.flmesh import client_mesh
+        size = max(1, min(len(jax.devices()), n_clients))
+        if size not in self._meshes:
+            self._meshes[size] = client_mesh(
+                size, axis=self.workload.mesh_axis)
+        return self._meshes[size]
+
+    def _mesh_step(self, bound: int, mesh):
+        from repro.launch.fl_round import make_mesh_round_step
+        key = (bound, int(mesh.shape[self.workload.mesh_axis]))
+        if key not in self._mesh_steps:
+            self._mesh_steps[key] = jax.jit(make_mesh_round_step(
+                self.workload.loss_fn, mesh, lr=self.cfg.lr,
+                batch_size=self.cfg.batch_size, max_steps=bound,
+                server_lr=getattr(self.alg.strategy, "server_lr", 1.0),
+                axis=self.workload.mesh_axis))
+        return self._mesh_steps[key]
 
     @staticmethod
     def _bound(steps: np.ndarray | list[int]) -> int:
@@ -177,7 +233,7 @@ class ConstellationSim:
         K = self.constellation.n_sats
         if K < 2:
             # A single satellite cannot federate (heatmap top-left = 0).
-            return SimResult(self.alg.name, K, len(self.stations), [], [])
+            return self._result([], [], None)
         if self.alg.synchronous:
             return self._run_sync()
         return self._run_async()
@@ -218,6 +274,64 @@ class ConstellationSim:
         return update(params0, anchors, x, y, n, steps,
                       self.alg.strategy.prox_mu, rngs)
 
+    def _run_clients_mesh(self, global_params, ks: list[int],
+                          epochs: list[int], rng, *, weights, staleness,
+                          anchors=None):
+        """Cluster-as-collective round: clients are pod slots on the FL
+        mesh; local SGD + aggregation happen in one shard_mapped step
+        (`launch.fl_round.make_mesh_round_step`). Returns the *new global
+        params* — aggregation is part of the collective.
+
+        Batch assembly mirrors `_run_clients` exactly (same steps, same
+        per-client RNG stream), then pads the pod axis to a multiple of
+        the mesh axis size with zero-weight/zero-step slots — the dense
+        equivalent of an out-of-contact satellite.
+        """
+        from repro.sharding.flmesh import pad_client_count
+        steps_np = [self._steps_for(k, e) for k, e in zip(ks, epochs)]
+        mesh = self._client_mesh(len(ks))
+        total = pad_client_count(len(ks), mesh, self.workload.mesh_axis)
+        pad = total - len(ks)
+        ks_p = list(ks) + [ks[0]] * pad      # real rows; steps 0 mask them
+        x = jnp.asarray(self.data.x[ks_p])
+        y = jnp.asarray(self.data.y[ks_p])
+        n = jnp.asarray(self.data.n[ks_p])
+        steps = jnp.asarray(steps_np + [0] * pad, jnp.int32)
+        w = jnp.concatenate([jnp.asarray(weights, jnp.float32),
+                             jnp.zeros((pad,), jnp.float32)])
+        stale = jnp.concatenate([jnp.asarray(staleness, jnp.int32),
+                                 jnp.zeros((pad,), jnp.int32)])
+        rngs = jax.random.split(rng, len(ks))   # identical to the host path
+        if pad:
+            rngs = jnp.concatenate(
+                [rngs, jnp.broadcast_to(rngs[:1], (pad,) + rngs.shape[1:])])
+        if anchors is None:                      # sync barrier: broadcast
+            anchors = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (total,) + a.shape),
+                global_params)
+        elif pad:                                # FedBuff: pad with current
+            anchors = jax.tree.map(
+                lambda s, g: jnp.concatenate(
+                    [s, jnp.broadcast_to(g, (pad,) + g.shape)]),
+                anchors, global_params)
+        step_fn = self._mesh_step(self._bound(steps_np), mesh)
+        return step_fn(global_params, anchors, x, y, n, steps, w, stale,
+                       self.alg.strategy.prox_mu, rngs)
+
+    def _train_round(self, global_params, ks: list[int], epochs: list[int],
+                     rng, *, weights, staleness, anchors=None):
+        """Client updates + aggregation for one round (or buffer flush),
+        dispatched on the execution mode. Returns the new global params."""
+        if self.execution == "mesh":
+            return self._run_clients_mesh(
+                global_params, ks, epochs, rng, weights=weights,
+                staleness=staleness, anchors=anchors)
+        stacked = self._run_clients(global_params, ks, epochs, rng,
+                                    anchors=anchors)
+        return self.alg.strategy.aggregate(
+            global_params, stacked, jnp.asarray(weights),
+            jnp.asarray(staleness))
+
     def _finish_round(self, rounds: list[RoundRecord], curve: list,
                       global_params, *, t_start: float, t_end: float,
                       participants, epochs, idle_s, compute_s, comm_s,
@@ -229,13 +343,25 @@ class ConstellationSim:
             participants=participants, epochs=epochs, idle_s=idle_s,
             compute_s=compute_s, comm_s=comm_s, relays=relays,
             staleness=staleness, relay_hops=relay_hops,
-            comms_bytes=comms_bytes,
+            comms_bytes=comms_bytes, execution=self.execution,
         )
+        if self.cfg.record_params and global_params is not None:
+            self._params_hist.append(jax.device_get(global_params))
         if do_eval:
             rec.accuracy = self._eval(global_params, t_end)
             curve.append((rec.idx, t_end, rec.accuracy))
         rounds.append(rec)
         return rec
+
+    def _result(self, rounds: list[RoundRecord], curve: list,
+                global_params) -> SimResult:
+        final = (jax.device_get(global_params)
+                 if (self.cfg.train and global_params is not None) else None)
+        return SimResult(self.alg.name, self.constellation.n_sats,
+                         len(self.stations), rounds, curve,
+                         execution=self.execution,
+                         params_history=self._params_hist,
+                         final_params=final)
 
     def _eval(self, global_params, t: float) -> float:
         """Evaluation-stage client selection: same contact protocol.
@@ -289,12 +415,10 @@ class ConstellationSim:
             if cfg.train:
                 rng, sub = jax.random.split(rng)
                 ks = [p.k for p in plans]
-                stacked = self._run_clients(
-                    global_params, ks, [p.epochs for p in plans], sub)
-                weights = jnp.asarray(self.data.n[ks], jnp.float32)
-                global_params = alg.strategy.aggregate(
-                    global_params, stacked, weights,
-                    jnp.zeros((len(plans),), jnp.int32))
+                global_params = self._train_round(
+                    global_params, ks, [p.epochs for p in plans], sub,
+                    weights=jnp.asarray(self.data.n[ks], jnp.float32),
+                    staleness=jnp.zeros((len(plans),), jnp.int32))
 
             self._finish_round(
                 rounds, curve, global_params,
@@ -316,7 +440,7 @@ class ConstellationSim:
                                        or r == cfg.max_rounds - 1),
             )
             t = t_end
-        return SimResult(alg.name, K, len(self.stations), rounds, curve)
+        return self._result(rounds, curve, global_params)
 
     # ------------------------------------------------------------------ #
     def _run_async(self) -> SimResult:
@@ -384,12 +508,9 @@ class ConstellationSim:
                     lambda *xs: jnp.stack(xs),
                     *[history[b[1]] for b in buffer])
                 rng, sub = jax.random.split(rng)
-                stacked = self._run_clients(
+                global_params = self._train_round(
                     global_params, ks, [b[2] for b in buffer], sub,
-                    anchors=anchors)
-                global_params = alg.strategy.aggregate(
-                    global_params, stacked, jnp.asarray(weights),
-                    jnp.asarray(staleness))
+                    weights=weights, staleness=staleness, anchors=anchors)
             version += 1
             history[version] = global_params
             # The buffer-filling satellite re-downloads the *new* model.
@@ -417,4 +538,4 @@ class ConstellationSim:
             )
             last_agg_t = t_agg
             buffer = []
-        return SimResult(alg.name, K, len(self.stations), rounds, curve)
+        return self._result(rounds, curve, global_params)

@@ -22,6 +22,9 @@ class RoundRecord:
     # on the wire per participant (model download + every return leg).
     relay_hops: list[int] = dataclasses.field(default_factory=list)
     comms_bytes: list[float] = dataclasses.field(default_factory=list)
+    # How the round's client updates executed: "host" (vmapped reference
+    # path) or "mesh" (cluster-as-collective shard_map + masked psum).
+    execution: str = "host"
 
     @property
     def duration_s(self) -> float:
@@ -48,6 +51,12 @@ class SimResult:
     n_stations: int
     rounds: list[RoundRecord]
     accuracy_curve: list[tuple[int, float, float]]  # (round, sim time s, acc)
+    # Execution-mode provenance + parity hooks: the global-model snapshots
+    # are host pytrees (device_get), populated only when the run trains
+    # (`params_history` additionally needs SimConfig.record_params).
+    execution: str = "host"
+    params_history: list = dataclasses.field(default_factory=list)
+    final_params: object | None = None
 
     @property
     def n_rounds(self) -> int:
@@ -94,6 +103,7 @@ class SimResult:
     def summary(self) -> dict:
         return {
             "algorithm": self.algorithm,
+            "execution": self.execution,
             "n_sats": self.n_sats,
             "n_stations": self.n_stations,
             "rounds": self.n_rounds,

@@ -7,6 +7,8 @@ import pytest
 # Tests run on the single real CPU device (the 512-device override is
 # exclusively for launch/dryrun.py, which sets it before importing jax).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# Repo root, so tests can exercise the `benchmarks` package (sweep cache).
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), ".."))
 
 # `hypothesis` is a dev-only dependency (requirements-dev.txt). The tier-1
 # suite must still *collect* without it, so when the import fails we install

@@ -1,0 +1,56 @@
+"""Unit tests for the cross-PR round-duration diff checker."""
+from benchmarks.check_regression import compare, overlap_count
+
+
+def _art(rows, suite="sweep_ci"):
+    return {"schema": 1, "suites": {suite: {"rows": rows}}}
+
+
+def test_regression_detected_over_threshold():
+    base = _art([["sweep/fedavg/c2s2/g1", 10.0, "x"]])
+    cur = _art([["sweep/fedavg/c2s2/g1", 11.5, "x"]])
+    out = compare(base, cur, threshold=0.10)
+    assert len(out) == 1 and "sweep/fedavg/c2s2/g1" in out[0]
+
+
+def test_within_threshold_and_improvements_pass():
+    base = _art([["a", 10.0, ""], ["b", 10.0, ""]])
+    cur = _art([["a", 10.9, ""],          # +9% < 10%
+                ["b", 7.0, ""]])          # faster is never a regression
+    assert compare(base, cur, threshold=0.10) == []
+
+
+def test_tiny_absolute_drift_ignored():
+    # 0.001 h rows jitter relatively but are below the absolute floor.
+    base = _art([["a", 0.002, ""]])
+    cur = _art([["a", 0.003, ""]])
+    assert compare(base, cur, threshold=0.10) == []
+
+
+def test_new_missing_and_nonnumeric_rows_skipped():
+    base = _art([["gone", 5.0, ""], ["skip", 0, "skip:K<2"],
+                 ["isl", "idle_h=1;hops=2", ""],
+                 ["sweep/scenarios_run", 16, ""]])
+    cur = _art([["fresh", 99.0, ""], ["skip", 0, "skip:K<2"],
+                ["isl", "idle_h=9;hops=2", ""],
+                ["sweep/scenarios_run", 32, ""]])
+    assert compare(base, cur) == []       # nothing comparable regressed
+    assert overlap_count(base, cur) == 3  # skip + isl + scenarios_run
+
+
+def test_unknown_suites_ignored():
+    base = _art([["acc/fedavg", 0.5, ""]], suite="accuracy")
+    cur = _art([["acc/fedavg", 0.9, ""]], suite="accuracy")
+    # Accuracy rows grow when training improves — never duration checked.
+    assert compare(base, cur) == []
+
+
+def test_multi_suite_overlap():
+    base = {"schema": 1, "suites": {
+        "sweep_ci": {"rows": [["s/a", 1.0, ""]]},
+        "sweep768": {"rows": [["s/b", 2.0, ""]]}}}
+    cur = {"schema": 1, "suites": {
+        "sweep_ci": {"rows": [["s/a", 1.0, ""]]},
+        "sweep768": {"rows": [["s/b", 3.0, ""]]}}}
+    out = compare(base, cur)
+    assert len(out) == 1 and out[0].startswith("sweep768/s/b")

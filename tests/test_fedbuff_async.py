@@ -27,6 +27,30 @@ def test_fresh_updates_keep_sample_weights():
     np.testing.assert_array_equal(w, ns)   # boundary staleness admitted
 
 
+def test_empty_buffer_yields_empty_weights():
+    """Degenerate flush: no buffered updates -> no weights (shape-safe)."""
+    w = buffer_weights(np.empty((0,), np.float32), np.empty((0,), np.int32),
+                       max_staleness=4)
+    assert w.shape == (0,)
+
+
+def test_all_stale_buffer_keeps_global_model():
+    """Every buffered client over the staleness bound: all weights zero,
+    and the FedBuff server update must leave the global model untouched
+    (the zero-sum guard in normalized_weights)."""
+    import jax.numpy as jnp
+    from repro.core.aggregation import weighted_delta_update
+    ns = np.array([100.0, 250.0], np.float32)
+    staleness = np.array([9, 7], np.int32)
+    w = buffer_weights(ns, staleness, max_staleness=4)
+    np.testing.assert_array_equal(w, [0.0, 0.0])
+    gl = {"w": jnp.arange(4, dtype=jnp.float32)}
+    stacked = {"w": jnp.ones((2, 4), jnp.float32) * 99.0}
+    out = weighted_delta_update(gl, stacked, jnp.asarray(w),
+                                jnp.asarray(staleness))
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(gl["w"]))
+
+
 # --------------------------------------------------------- history prune --
 def test_prune_keeps_every_inflight_anchor():
     history = {v: f"model_v{v}" for v in range(6)}
@@ -41,6 +65,15 @@ def test_prune_with_no_inflight_keeps_only_current():
     history = {v: v for v in range(4)}
     prune_history(history, outstanding=[], version=3)
     assert sorted(history) == [3]
+
+
+def test_prune_with_duplicate_outstanding_ids():
+    """Several in-flight clients may anchor on the *same* version (they
+    downloaded during the same pass); duplicates must not confuse the
+    min() watermark."""
+    history = {v: v for v in range(6)}
+    prune_history(history, outstanding=[3, 3, 5, 3], version=5)
+    assert sorted(history) == [3, 4, 5]
 
 
 def test_prune_is_monotone_safe():

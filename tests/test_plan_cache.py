@@ -1,0 +1,136 @@
+"""Per-workload contact-plan re-rating (ROADMAP "per-workload link budgets").
+
+The benchmark layer caches one ContactPlan per scenario — the window
+geometry is workload-independent and expensive. The *rates* are not:
+`run_scenario` must re-price the cached plan with the workload's
+`HardwareModel` (`ContactPlan.rerate`), otherwise a workload flying a
+slower radio (or a heavier model) silently plans ISL relays and upload
+times against the default 580 Mbps link.
+"""
+import numpy as np
+import pytest
+
+from repro.comms import ConstantRate, LinkBudget
+from repro.comms.contact_plan import ContactPlan, _EdgeWindows
+from repro.comms.routing import earliest_arrival
+from repro.core import ALGORITHMS, register_workload
+from repro.core.timing import HardwareModel
+from repro.core.workload import classification_workload
+from repro.orbits import WalkerStar, constants as C, station_subnetwork
+from repro.sim import ConstellationSim, SimConfig
+
+HORIZON = 3 * 86400.0
+
+
+def _toy_plan(rate_bps: float) -> ContactPlan:
+    """Sat 0 has a late ground pass; sat 1 an early one; one 100 s ISL
+    window at t=100 connects them (the classic relay setup)."""
+    def ew(spans):
+        starts = np.asarray([s for s, _ in spans], float)
+        ends = np.asarray([s + d for s, d in spans], float)
+        return _EdgeWindows(starts, ends, np.full(len(spans), rate_bps))
+
+    return ContactPlan(
+        n_sats=2,
+        ground=[ew([(50_000.0, 600.0)]), ew([(1_000.0, 600.0)])],
+        isl={(0, 1): ew([(100.0, 100.0)])},
+        neighbors={0: [1], 1: [0]},
+        horizon_s=100_000.0)
+
+
+# ------------------------------------------------------------- rerate() --
+def test_rerate_preserves_geometry_and_reprices():
+    fast = _toy_plan(rate_bps=8e6)
+    slow = fast.rerate(ConstantRate(0.008))      # 8 kbps
+    for k in range(2):
+        np.testing.assert_array_equal(fast.ground[k].starts,
+                                      slow.ground[k].starts)
+        np.testing.assert_array_equal(fast.ground[k].ends,
+                                      slow.ground[k].ends)
+    assert float(slow.ground[0].rates[0]) == 8e3
+    assert float(slow.isl[(0, 1)].rates[0]) == 8e3
+    # The original plan is untouched (it is a shared cache entry).
+    assert float(fast.isl[(0, 1)].rates[0]) == 8e6
+
+
+def test_rerate_rejects_geometry_dependent_links():
+    with pytest.raises(ValueError):
+        _toy_plan(8e6).rerate(LinkBudget())
+
+
+def test_big_model_makes_isl_window_too_short():
+    """The satellite-task scenario: at 8 Mbps a 100 s ISL window moves
+    100 MB; a model bigger than that cannot relay (the transfer must fit
+    inside the contact window) and falls back to the direct upload, while
+    a small model still takes the relay to the earlier ground pass."""
+    plan = _toy_plan(rate_bps=8e6)
+    small, big = 200_000.0, 200e6                 # 0.2 MB vs 200 MB
+
+    assert plan.next_isl_transfer(0, 1, 0.0, small) is not None
+    assert plan.next_isl_transfer(0, 1, 0.0, big) is None
+
+    r_small = earliest_arrival(plan, 0, 0.0, small, max_hops=3)
+    assert r_small.isl_hops == 1 and r_small.path == (0, 1)
+    r_big = earliest_arrival(plan, 0, 0.0, big, max_hops=3)
+    assert r_big.isl_hops == 0 and r_big.path == (0,)
+    assert r_big.arrival_s > r_small.arrival_s
+
+    # Equivalently: the *same* model stops fitting when a slower radio
+    # re-rates the cached plan (volume = duration x rate).
+    slow = plan.rerate(ConstantRate(0.8))         # 0.8 Mbps -> 10 MB/window
+    assert slow.next_isl_transfer(0, 1, 0.0, 20e6) is None
+    assert plan.next_isl_transfer(0, 1, 0.0, 20e6) is not None
+
+
+# ------------------------------------------- run_scenario cache re-rating --
+def _slowlink_builder():
+    from repro.models.femnist_mlp import femnist_mlp_apply, femnist_mlp_init
+    return classification_workload(
+        "femnist_slowlink", femnist_mlp_init, femnist_mlp_apply,
+        model_bytes_override=C.MODEL_BYTES,
+        epoch_mflops_override=C.EPOCH_MFLOPS,
+        link_mbps=5.8)                            # 100x slower radio
+
+
+def test_run_scenario_rerates_cached_plan_per_workload():
+    """Regression for the ROADMAP-flagged cache bug: the ISL sweep path
+    must hand the engine a plan priced at the *workload's* link rate, not
+    whatever rate the cache was first built with."""
+    from benchmarks.common import access, contact_plan, run_scenario
+    register_workload("femnist_slowlink", _slowlink_builder)
+    wl_hw = HardwareModel.for_workload("femnist_slowlink")
+    assert wl_hw.link_mbps == 5.8                 # Workload override wins
+
+    # The cached geometry is shared; the rates follow the caller.
+    base = contact_plan(1, 10, 1, HORIZON)
+    slow = contact_plan(1, 10, 1, HORIZON, 5.8)
+    np.testing.assert_array_equal(base.ground[0].starts,
+                                  slow.ground[0].starts)
+    assert float(base.ground[0].rates[0]) == C.LINK_MBPS * 1e6
+    assert all(float(r) == 5.8e6 for ew in slow.ground for r in ew.rates)
+
+    kw = dict(rounds=3, train=False, horizon_s=HORIZON)
+    res_slow = run_scenario("fedprox_intracc_isl", 1, 10, 1,
+                            workload="femnist_slowlink", **kw)
+    res_fast = run_scenario("fedprox_intracc_isl", 1, 10, 1, **kw)
+    assert res_slow.n_rounds >= 1 and res_fast.n_rounds >= 1
+
+    # Gold check: the cached-and-rerated plan reproduces what the engine
+    # builds from scratch for this workload's HardwareModel.
+    c = WalkerStar(1, 10)
+    cfg = SimConfig(max_rounds=3, horizon_s=HORIZON, train=False)
+    direct = ConstellationSim(
+        c, station_subnetwork(1), ALGORITHMS["fedprox_intracc_isl"],
+        cfg=cfg, access=access(1, 10, 1, HORIZON),
+        workload="femnist_slowlink").run()
+    assert [r.t_end for r in res_slow.rounds] == \
+        [r.t_end for r in direct.rounds]
+    assert [r.comms_bytes for r in res_slow.rounds] == \
+        [r.comms_bytes for r in direct.rounds]
+    # And the 100x slower radio is visible in the round clock: uploads
+    # take longer, so (with identical geometry) rounds cannot end sooner.
+    assert all(ts >= tf for ts, tf in
+               zip([r.t_end for r in res_slow.rounds],
+                   [r.t_end for r in res_fast.rounds]))
+    assert [r.t_end for r in res_slow.rounds] != \
+        [r.t_end for r in res_fast.rounds]

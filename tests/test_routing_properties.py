@@ -1,0 +1,182 @@
+"""Property-based tests for `repro.comms.routing.earliest_arrival`.
+
+Two invariants of contact-graph routing, checked over randomized contact
+plans:
+
+  * widening the hop budget never hurts: the earliest server-arrival time
+    is non-increasing in `max_hops` (a route legal at h hops is legal at
+    h+1), and `max_hops=0` is exactly the direct upload;
+  * every returned itinerary is *physically executable*: replaying the
+    path leg by leg against the plan's own contact windows reproduces the
+    route's departure, upload start, and arrival, with each leg starting
+    no earlier than the data is available and fitting inside a window.
+
+The hypothesis variants explore the space adaptively (they skip cleanly
+when hypothesis isn't installed — see conftest); the seeded variants run
+the same checkers over a fixed fleet of random plans so tier-1 always
+exercises the properties.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st_
+
+from repro.comms.contact_plan import ContactPlan, _EdgeWindows
+from repro.comms.routing import earliest_arrival
+
+HORIZON = 1e6
+
+
+# ------------------------------------------------------------- builders --
+def _edge_windows(spans, rate):
+    if not spans:
+        return _EdgeWindows(np.empty(0), np.empty(0), np.empty(0))
+    starts = np.asarray(sorted(s for s, _ in spans), float)
+    by_start = sorted(spans)
+    ends = np.asarray([s + d for s, d in by_start], float)
+    rates = np.full(len(spans), float(rate))
+    return _EdgeWindows(starts, ends, rates)
+
+
+def make_plan(n_sats, ground, isl, *, ground_rate=8e5, isl_rate=4e5):
+    """Synthetic ContactPlan. `ground`: per-sat list of (start, dur);
+    `isl`: {(i, j): [(start, dur), ...]} with i < j."""
+    neighbors: dict[int, list[int]] = {}
+    isl_ew = {}
+    for (i, j), spans in isl.items():
+        isl_ew[(i, j)] = _edge_windows(spans, isl_rate)
+        if spans:
+            neighbors.setdefault(i, []).append(j)
+            neighbors.setdefault(j, []).append(i)
+    return ContactPlan(
+        n_sats=n_sats,
+        ground=[_edge_windows(g, ground_rate) for g in ground],
+        isl=isl_ew, neighbors=neighbors, horizon_s=HORIZON)
+
+
+def random_plan(rng: np.random.Generator):
+    n_sats = int(rng.integers(2, 6))
+    ground = []
+    for _ in range(n_sats):
+        n_w = int(rng.integers(0, 4))
+        ground.append([(float(rng.uniform(0, HORIZON * 0.8)),
+                        float(rng.uniform(10.0, 2000.0)))
+                       for _ in range(n_w)])
+    isl = {}
+    for i in range(n_sats):
+        for j in range(i + 1, n_sats):
+            if rng.random() < 0.5:
+                n_w = int(rng.integers(1, 4))
+                isl[(i, j)] = [(float(rng.uniform(0, HORIZON * 0.8)),
+                                float(rng.uniform(1.0, 1000.0)))
+                               for _ in range(n_w)]
+    return make_plan(n_sats, ground, isl)
+
+
+# ------------------------------------------------------------- checkers --
+def check_hop_monotonicity(plan, src, t_ready, n_bytes, max_hops=4):
+    routes = [earliest_arrival(plan, src, t_ready, n_bytes, max_hops=h)
+              for h in range(max_hops + 1)]
+    # Once any hop budget finds a route, every larger budget must too,
+    # and never with a later arrival.
+    prev = None
+    for h, r in enumerate(routes):
+        if prev is not None:
+            assert r is not None, f"route lost when hops {h-1} -> {h}"
+            assert r.arrival_s <= prev.arrival_s + 1e-9, \
+                f"arrival regressed when hops {h-1} -> {h}"
+        if r is not None:
+            assert r.isl_hops <= h
+            prev = r
+    # Zero hops is the direct upload (when one exists).
+    direct = plan.next_ground_upload(src, t_ready, n_bytes)
+    if routes[0] is not None:
+        assert direct is not None
+        assert routes[0].path == (src,) and routes[0].isl_hops == 0
+        assert routes[0].tx_start == direct[0]
+        assert routes[0].arrival_s == direct[1]
+    else:
+        assert direct is None
+    return routes
+
+
+def check_itinerary_consistency(plan, route, src, t_ready, n_bytes):
+    """Replay the itinerary against the plan's contact windows."""
+    assert route.path[0] == src
+    assert len(route.path) == route.isl_hops + 1
+    assert len(set(route.path)) == len(route.path), "path revisits a sat"
+    assert route.bytes_on_wire == pytest.approx(
+        n_bytes * (route.isl_hops + 1))
+    t = t_ready
+    first_leg = None
+    for a, b in zip(route.path, route.path[1:]):
+        leg = plan.next_isl_transfer(a, b, t, n_bytes)
+        assert leg is not None, f"leg {a}->{b} not executable at {t}"
+        s, e = leg
+        assert t <= s < e, "leg starts before its data is available"
+        # The transfer fits inside a contact window of this edge.
+        ew = plan.isl[(min(a, b), max(a, b))]
+        assert any(ws <= s and e <= we
+                   for ws, we in zip(ew.starts, ew.ends)), \
+            "ISL leg does not fit any contact window"
+        first_leg = s if first_leg is None else first_leg
+        t = e
+    up = plan.next_ground_upload(route.path[-1], t, n_bytes)
+    assert up is not None
+    tx_start, arrival = up
+    # Contact-window ordering: download-by-relay happens before upload.
+    assert t <= tx_start < arrival
+    assert route.tx_start == pytest.approx(tx_start)
+    assert route.arrival_s == pytest.approx(arrival)
+    assert route.departure_s == pytest.approx(
+        first_leg if first_leg is not None else tx_start)
+    assert route.departure_s >= t_ready
+
+
+# ------------------------------------------------- seeded tier-1 sweeps --
+@pytest.mark.parametrize("seed", range(20))
+def test_hop_bound_monotone_seeded(seed):
+    rng = np.random.default_rng(seed)
+    plan = random_plan(rng)
+    src = int(rng.integers(0, plan.n_sats))
+    t_ready = float(rng.uniform(0, HORIZON * 0.5))
+    n_bytes = float(rng.uniform(1e3, 5e7))
+    check_hop_monotonicity(plan, src, t_ready, n_bytes)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_itinerary_respects_contact_windows_seeded(seed):
+    rng = np.random.default_rng(1000 + seed)
+    plan = random_plan(rng)
+    for src in range(plan.n_sats):
+        t_ready = float(rng.uniform(0, HORIZON * 0.5))
+        n_bytes = float(rng.uniform(1e3, 5e6))
+        route = earliest_arrival(plan, src, t_ready, n_bytes, max_hops=3)
+        if route is not None:
+            check_itinerary_consistency(plan, route, src, t_ready, n_bytes)
+
+
+# --------------------------------------------------- hypothesis variants --
+@given(seed=st_.integers(min_value=0, max_value=2**32 - 1),
+       hops=st_.integers(min_value=1, max_value=5))
+@settings(max_examples=40, deadline=None)
+def test_hop_bound_monotone_property(seed, hops):
+    rng = np.random.default_rng(seed)
+    plan = random_plan(rng)
+    src = int(rng.integers(0, plan.n_sats))
+    t_ready = float(rng.uniform(0, HORIZON * 0.5))
+    n_bytes = float(rng.uniform(1e3, 5e7))
+    check_hop_monotonicity(plan, src, t_ready, n_bytes, max_hops=hops)
+
+
+@given(seed=st_.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_itinerary_consistency_property(seed):
+    rng = np.random.default_rng(seed)
+    plan = random_plan(rng)
+    src = int(rng.integers(0, plan.n_sats))
+    t_ready = float(rng.uniform(0, HORIZON * 0.5))
+    n_bytes = float(rng.uniform(1e3, 5e6))
+    route = earliest_arrival(plan, src, t_ready, n_bytes, max_hops=3)
+    if route is not None:
+        check_itinerary_consistency(plan, route, src, t_ready, n_bytes)

@@ -64,6 +64,55 @@ def test_derived_cost_from_parameter_tree():
     assert hw.epoch_time_s > HardwareModel().epoch_time_s  # heavier model
 
 
+def test_conv_tree_cost_model_edges():
+    """`model_bytes`/`epoch_mflops` on the conv parameter tree: derived
+    from the real tree + spatial-position FLOPs, stable across calls
+    (cached n_params), and independent of any paper constant."""
+    cnn = get_workload("femnist_cnn")
+    params = cnn.init_fn(jax.random.PRNGKey(0))
+    n = sum(int(p.size) for p in jax.tree.leaves(params))
+    assert cnn.n_params == n == 47_887
+    assert cnn.model_bytes == 4 * n
+    # Conv FLOPs scale with spatial positions, not parameters: the CNN
+    # must cost *more* FLOPs/sample than a same-size dense net would.
+    assert cnn.flops_per_sample > 6.0 * n
+    assert cnn.epoch_mflops == pytest.approx(
+        cnn.flops_per_sample * cnn.samples_per_epoch / 1e6)
+    assert cnn.n_params == 47_887                 # cached_property stable
+
+
+def test_moe_tree_cost_model():
+    """`model_bytes`/`epoch_mflops` on a Mixture-of-Experts parameter
+    tree: expert stacks (E, d, ff) count fully toward bytes on the wire,
+    and bf16 weights halve bytes_per_param."""
+    from repro.configs import get_config
+    from repro.core import lm_workload
+    cfg = get_config("grok-1-314b").reduced()
+    assert cfg.arch_type == "moe" and cfg.moe is not None
+    wl = lm_workload(cfg, name="moe_test", seq_len=16,
+                     samples_per_client=8, eval_samples=4)
+    params = wl.init_fn(jax.random.PRNGKey(0))
+    n = sum(int(p.size) for p in jax.tree.leaves(params))
+    assert wl.n_params == n
+    # Bytes on the wire follow the config's dtype (bf16 halves them; the
+    # reduced CPU config trains f32).
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    assert wl.bytes_per_param == itemsize
+    assert wl.model_bytes == itemsize * n
+    full = lm_workload(get_config("grok-1-314b"), name="moe_full_bytes")
+    assert full.bytes_per_param == 2              # bf16 on the wire
+    # Expert stacks dominate a MoE tree: most bytes live in the
+    # (layers, E, d, ff) expert leaves, and every one is on the wire.
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    expert_elems = sum(
+        int(leaf.size) for path, leaf in leaves
+        if any(str(getattr(e, "key", "")) == "moe" for e in path)
+        and str(path[-1].key) in ("w1", "w2", "w3"))
+    assert expert_elems > 0.5 * n
+    assert wl.epoch_mflops == pytest.approx(
+        6.0 * 17 * n * 8 / 1e6)                   # 6 FLOP/param/token
+
+
 def test_cost_model_required():
     wl = Workload(name="x", init_fn=lambda r: {}, loss_fn=None,
                   eval_fn=None, make_data=None, sample_shape=())
@@ -74,8 +123,9 @@ def test_cost_model_required():
 # ------------------------------------------------- femnist_mlp regression --
 def test_femnist_mlp_workload_bitwise_matches_legacy_path(scenario):
     """The tentpole's back-compat guarantee: running through the workload
-    registry reproduces the pre-refactor default path exactly — same
-    round timings, same participants, same accuracy curve (fixed seed)."""
+    registry — and through the explicit execution="host" dispatch —
+    reproduces the pre-refactor default path exactly: same round timings,
+    same participants, same accuracy curve (fixed seed)."""
     c, st, aw = scenario
     data = synth_femnist(c.n_sats, seed=0)
     cfg = SimConfig(max_rounds=4, horizon_s=HORIZON_S, train=True,
@@ -83,18 +133,20 @@ def test_femnist_mlp_workload_bitwise_matches_legacy_path(scenario):
     for alg in ("fedavg", "fedprox", "fedbuff"):
         legacy = ConstellationSim(c, st, ALGORITHMS[alg], data=data,
                                   cfg=cfg, access=aw).run()
-        viawl = ConstellationSim(c, st, ALGORITHMS[alg], data=data,
-                                 cfg=cfg, access=aw,
-                                 workload="femnist_mlp").run()
-        assert [r.t_end for r in legacy.rounds] == \
-            [r.t_end for r in viawl.rounds], alg
-        assert [r.participants for r in legacy.rounds] == \
-            [r.participants for r in viawl.rounds], alg
-        assert [r.idle_s for r in legacy.rounds] == \
-            [r.idle_s for r in viawl.rounds], alg
-        # bitwise: same jitted computation, same seed, no tolerance
-        assert legacy.accuracy_curve == viawl.accuracy_curve, alg
-        assert legacy.n_rounds > 0, alg
+        assert legacy.execution == "host"     # the seed path IS host mode
+        for kwargs in ({"workload": "femnist_mlp"},
+                       {"workload": "femnist_mlp", "execution": "host"}):
+            viawl = ConstellationSim(c, st, ALGORITHMS[alg], data=data,
+                                     cfg=cfg, access=aw, **kwargs).run()
+            assert [r.t_end for r in legacy.rounds] == \
+                [r.t_end for r in viawl.rounds], alg
+            assert [r.participants for r in legacy.rounds] == \
+                [r.participants for r in viawl.rounds], alg
+            assert [r.idle_s for r in legacy.rounds] == \
+                [r.idle_s for r in viawl.rounds], alg
+            # bitwise: same jitted computation, same seed, no tolerance
+            assert legacy.accuracy_curve == viawl.accuracy_curve, alg
+            assert legacy.n_rounds > 0, alg
 
 
 def test_femnist_mlp_timing_matches_legacy_for_all_algorithms(scenario):
@@ -110,6 +162,127 @@ def test_femnist_mlp_timing_matches_legacy_for_all_algorithms(scenario):
             [r.t_end for r in viawl.rounds], alg.name
         assert [r.comms_bytes for r in legacy.rounds] == \
             [r.comms_bytes for r in viawl.rounds], alg.name
+
+
+# ----------------------------------------------------- mesh-path parity --
+def _max_param_diff(tree_a, tree_b) -> float:
+    return max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+               for a, b in zip(jax.tree.leaves(tree_a),
+                               jax.tree.leaves(tree_b)))
+
+
+def test_mesh_execution_matches_host_path_femnist(scenario):
+    """Parity regression (tentpole acceptance): the cluster-as-collective
+    mesh dispatch reproduces the vmapped host path round for round —
+    identical timings/participants (selection is execution-independent),
+    global params within 1e-5 after every round, identical accuracy — for
+    the sync barrier (FedAvg/FedProx) AND the FedBuff buffer flush."""
+    c, st, aw = scenario
+    data = synth_femnist(c.n_sats, seed=0)
+    cfg = SimConfig(max_rounds=3, horizon_s=HORIZON_S, train=True,
+                    eval_every=1, record_params=True)
+    for alg in ("fedavg", "fedprox", "fedbuff"):
+        runs = {}
+        for mode in ("host", "mesh"):
+            runs[mode] = ConstellationSim(
+                c, st, ALGORITHMS[alg], data=data, cfg=cfg, access=aw,
+                workload="femnist_mlp", execution=mode).run()
+        host, mesh = runs["host"], runs["mesh"]
+        assert mesh.execution == "mesh"
+        assert all(r.execution == "mesh" for r in mesh.rounds)
+        # Orbital bookkeeping is execution-independent (bitwise).
+        assert [r.t_end for r in host.rounds] == \
+            [r.t_end for r in mesh.rounds], alg
+        assert [r.participants for r in host.rounds] == \
+            [r.participants for r in mesh.rounds], alg
+        assert [r.comms_bytes for r in host.rounds] == \
+            [r.comms_bytes for r in mesh.rounds], alg
+        # The collective matches the host reduction on every round's
+        # global model...
+        assert len(host.params_history) == len(mesh.params_history) > 0
+        for i, (hp, mp) in enumerate(zip(host.params_history,
+                                         mesh.params_history)):
+            assert _max_param_diff(hp, mp) < 1e-5, (alg, i)
+        assert _max_param_diff(host.final_params, mesh.final_params) < 1e-5
+        # ... and therefore on the accuracy curve.
+        for (ri, ti, ai), (rj, tj, aj) in zip(host.accuracy_curve,
+                                              mesh.accuracy_curve):
+            assert (ri, ti) == (rj, tj), alg
+            assert abs(ai - aj) < 1e-5, alg
+
+
+def test_workload_declared_mesh_execution(scenario):
+    """A workload may declare execution="mesh"; the engine honours it
+    without a per-run override, and with_execution validates its input."""
+    c, st, aw = scenario
+    wl = get_workload("femnist_mlp").with_execution("mesh")
+    assert wl.execution == "mesh"
+    assert get_workload("femnist_mlp").execution == "host"  # original kept
+    cfg = SimConfig(max_rounds=2, horizon_s=HORIZON_S, train=True,
+                    eval_every=1)
+    res = ConstellationSim(c, st, ALGORITHMS["fedavg"],
+                           data=synth_femnist(c.n_sats, seed=0),
+                           cfg=cfg, access=aw, workload=wl).run()
+    assert res.execution == "mesh" and res.n_rounds >= 1
+    with pytest.raises(ValueError):
+        wl.with_execution("tpu-pod")
+    with pytest.raises(ValueError):
+        ConstellationSim(c, st, ALGORITHMS["fedavg"], cfg=cfg, access=aw,
+                         workload="femnist_mlp", execution="warp")
+
+
+def test_mesh_rejects_custom_aggregation(scenario):
+    """A strategy overriding aggregate() outside the weighted-average /
+    discounted-delta family must be refused on the mesh path (the
+    collective would silently bypass it), and still run on host."""
+    import dataclasses as _dc
+
+    from repro.core import FedAvgSat, spaceify
+
+    @_dc.dataclass(frozen=True)
+    class MedianStrategy(FedAvgSat):
+        name: str = "fedmedian"
+
+        def aggregate(self, global_params, client_params, weights,
+                      staleness):
+            return jax.tree.map(lambda xs: jnp.median(xs, axis=0),
+                                client_params)
+
+    c, st, aw = scenario
+    alg = spaceify(MedianStrategy())
+    cfg = SimConfig(max_rounds=2, horizon_s=HORIZON_S, train=True,
+                    eval_every=1)
+    data = synth_femnist(c.n_sats, seed=0)
+    with pytest.raises(ValueError, match="aggregate"):
+        ConstellationSim(c, st, alg, data=data, cfg=cfg, access=aw,
+                         workload="femnist_mlp", execution="mesh")
+    res = ConstellationSim(c, st, alg, data=data, cfg=cfg, access=aw,
+                           workload="femnist_mlp", execution="host").run()
+    assert res.n_rounds >= 1
+
+
+def test_lm_tiny_mesh_matches_host(scenario):
+    """Tentpole acceptance: lm_tiny end-to-end on the mesh path, per-round
+    params within 1e-5 of the host path."""
+    c, st, aw = scenario
+    wl = get_workload("lm_tiny")
+    hw = HardwareModel.for_workload(wl)
+    cfg = SimConfig(max_rounds=2, horizon_s=HORIZON_S, train=True,
+                    eval_every=1, batch_size=8, max_steps=8,
+                    record_params=True)
+    runs = {}
+    for mode in ("host", "mesh"):
+        runs[mode] = ConstellationSim(
+            c, st, ALGORITHMS["fedavg"], workload=wl, hw=hw, cfg=cfg,
+            access=aw, execution=mode).run()
+    host, mesh = runs["host"], runs["mesh"]
+    assert mesh.n_rounds == host.n_rounds >= 2
+    for i, (hp, mp) in enumerate(zip(host.params_history,
+                                     mesh.params_history)):
+        assert _max_param_diff(hp, mp) < 1e-5, i
+    for (_, _, ai), (_, _, aj) in zip(host.accuracy_curve,
+                                      mesh.accuracy_curve):
+        assert abs(ai - aj) < 1e-5
 
 
 # ------------------------------------------------------ lm_tiny end-to-end --
