@@ -8,6 +8,10 @@ bench_accuracy.py. Emits one row per scenario + aggregate claims.
 `--isl` adds the ISL-on dimension: the `*_intracc_isl` variants, whose
 relay hand-offs are routed over real inter-satellite links by
 `repro.comms` (relay hops + comms bytes appear in the derived column).
+`--link-model budget` re-prices every scenario's cached contact plan
+with the FSPL/Shannon `LinkBudget` (per-window slant-range geometry, no
+re-propagation) so the sweep quantifies the round-duration cost of
+realistic fading links; rows are tagged `sweep+budget/...`.
 `--horizon-days` shrinks the scenario for smoke/CI runs.
 """
 from __future__ import annotations
@@ -31,7 +35,8 @@ ISL_SUITE = ("fedavg_intracc_isl", "fedprox_intracc_isl")
 
 def run(rounds: int = 20, quick: bool = False, isl: bool = False,
         horizon_s: float = HORIZON_S, workload: str | None = None,
-        train: bool = False, execution: str | None = None):
+        train: bool = False, execution: str | None = None,
+        link_model: str | None = None):
     algs = ALG_SUITE[:4] if quick else ALG_SUITE
     if isl:
         algs = algs + ISL_SUITE
@@ -41,6 +46,10 @@ def run(rounds: int = 20, quick: bool = False, isl: bool = False,
     # Non-default workloads re-price every scenario (model bytes / epoch
     # FLOPs from the workload's derived cost model) and tag the row names.
     wtag = f"/{workload}" if workload else ""
+    if link_model and link_model != "constant":
+        # Budget pricing changes every row's comms arithmetic: tag the
+        # names so the regression gate compares like against like.
+        wtag = f"+{link_model}{wtag}"
     if execution:
         # The execution axis only changes *how* gradients run (host vmap
         # vs mesh collective); tagging timing-only rows with it would
@@ -62,7 +71,8 @@ def run(rounds: int = 20, quick: bool = False, isl: bool = False,
                     res = run_scenario(alg, cl, sp, g, rounds=rounds,
                                        horizon_s=horizon_s,
                                        workload=workload, train=train,
-                                       execution=execution)
+                                       execution=execution,
+                                       link_model=link_model)
                     derived = round(res.mean_idle_per_round_s / 3600, 3)
                     if alg.endswith("_isl"):
                         derived = (f"idle_h={derived};"
@@ -94,6 +104,11 @@ def main(argv=None):
     ap.add_argument("--execution", default=None, choices=("host", "mesh"),
                     help="client-update execution mode for --train runs "
                          "(default: the workload's declared mode)")
+    ap.add_argument("--link-model", default=None,
+                    choices=("constant", "budget"),
+                    help="comms pricing: constant 580 Mbps telemetry "
+                         "(default) or the slant-range LinkBudget, "
+                         "re-rated from the cached plan geometry")
     args = ap.parse_args(argv)
     if args.execution and not args.train:
         ap.error("--execution changes how gradients run; pair it with "
@@ -102,7 +117,8 @@ def main(argv=None):
                  else HORIZON_S)
     emit(run(rounds=args.rounds, quick=args.quick, isl=args.isl,
              horizon_s=horizon_s, workload=args.workload,
-             train=args.train, execution=args.execution))
+             train=args.train, execution=args.execution,
+             link_model=args.link_model))
 
 
 if __name__ == "__main__":

@@ -71,10 +71,18 @@ def overlap_count(baseline: dict, current: dict) -> int:
 
 
 def generate_trend_suite() -> dict:
-    """Run the deterministic CI trend grid (imports jax lazily)."""
+    """Run the deterministic CI trend grid (imports jax lazily).
+
+    Two pricing passes over the same quick grid: constant-rate rows
+    (`sweep/...`) and LinkBudget-priced rows (`sweep+budget/...`, the
+    geometry-cached re-rating path), so both comms-pricing modes are
+    gated against the committed baseline."""
     from benchmarks import bench_sweep
     rows = bench_sweep.run(rounds=TREND_ROUNDS, quick=True, isl=True,
                            horizon_s=TREND_HORIZON_DAYS * 86400.0)
+    rows += bench_sweep.run(rounds=TREND_ROUNDS, quick=True, isl=True,
+                            horizon_s=TREND_HORIZON_DAYS * 86400.0,
+                            link_model="budget")
     return {"schema": 1, "suites": {"sweep_ci": {
         "rounds": TREND_ROUNDS,
         "horizon_days": TREND_HORIZON_DAYS,

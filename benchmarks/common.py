@@ -8,6 +8,7 @@ by interval merging (AccessWindows.subset).
 from __future__ import annotations
 
 import functools
+import math
 import os
 import pickle
 import sys
@@ -17,6 +18,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.comms import (                                           # noqa: E402
     ConstantRate,
+    LinkBudget,
     build_contact_plan,
     compute_isl_windows,
 )
@@ -81,28 +83,40 @@ def isl_windows(clusters: int, sats: int, horizon_s: float = HORIZON_S):
 @functools.lru_cache(maxsize=256)
 def _base_contact_plan(clusters: int, sats: int, n_stations: int,
                        horizon_s: float = HORIZON_S):
-    """Default-rate ContactPlan (ground + ISL) for one scenario — the
-    expensive, workload-independent geometry."""
+    """Geometry-cached default-rate ContactPlan (ground + ISL) for one
+    scenario — the expensive, workload-independent part. Carries
+    per-window slant ranges (`cache_geometry=True`) so any LinkModel —
+    constant or range-dependent — can re-price it without a single new
+    propagation call."""
     return build_contact_plan(
         access(clusters, sats, n_stations, horizon_s),
         isl_windows(clusters, sats, horizon_s),
-        ConstantRate())
+        ConstantRate(),
+        constellation=WalkerStar(clusters, sats),
+        stations=station_subnetwork(n_stations),
+        cache_geometry=True)
 
 
 @functools.lru_cache(maxsize=256)
 def contact_plan(clusters: int, sats: int, n_stations: int,
                  horizon_s: float = HORIZON_S,
-                 link_mbps: float | None = None):
-    """ConstantRate ContactPlan for one scenario, priced at `link_mbps`.
+                 link=None):
+    """ContactPlan for one scenario, re-priced per link model.
 
-    The window geometry is cached once per scenario; per-workload link
-    rates re-price it (`ContactPlan.rerate`). `link_mbps=None` keeps the
-    paper-constant default — bitwise the seed's plan.
+    The window geometry is built and cached once per scenario; `link`
+    only re-prices it (`ContactPlan.rerate`, zero re-propagation):
+    None keeps the paper-constant default — bitwise the seed's plan —
+    a float is a `ConstantRate` in Mbps (per-workload radios), and any
+    frozen `LinkModel` instance (e.g. `LinkBudget()`) prices windows
+    from the cached slant-range geometry. The link is part of the
+    lru_cache key (frozen dataclasses hash by value).
     """
     base = _base_contact_plan(clusters, sats, n_stations, horizon_s)
-    if link_mbps is None:
+    if link is None:
         return base
-    return base.rerate(ConstantRate(link_mbps))
+    if isinstance(link, (int, float)):
+        link = ConstantRate(float(link))
+    return base.rerate(link)
 
 
 _DATA_CACHE: dict = {}
@@ -120,25 +134,40 @@ def data_for(n_sats: int, seed: int = 0, workload: str = DEFAULT_WORKLOAD):
 def run_scenario(alg: str, clusters: int, sats: int, n_stations: int,
                  *, rounds: int = 30, train: bool = False, seed: int = 0,
                  eval_every: int = 10, horizon_s: float = HORIZON_S,
-                 workload: str | None = None, execution: str | None = None):
+                 workload: str | None = None, execution: str | None = None,
+                 link_model: str | None = None):
     """Run one sweep cell. `workload=None` is the seed's FEMNIST-MLP path
     (bitwise); naming a registry workload swaps the model + loss + data
     AND the hardware cost model (comms bytes / epoch times) it implies.
     `execution` dispatches client updates ("host" | "mesh" | None = the
-    workload's declared mode)."""
+    workload's declared mode). `link_model` selects comms pricing:
+    None/"constant" keeps the (workload-scaled) constant radio; "budget"
+    re-prices the scenario's cached plan from per-window slant ranges
+    with the default `LinkBudget` (overriding any workload radio pin) —
+    and forces a ContactPlan even for non-ISL algorithms, so ground
+    uploads are range-priced too. A frozen `LinkModel` instance is used
+    as-is."""
     c = WalkerStar(clusters, sats)
     aw = access(clusters, sats, n_stations, horizon_s)
     algorithm = ALGORITHMS[alg]
+    if isinstance(link_model, str):
+        if link_model not in ("constant", "budget"):
+            raise ValueError(f"unknown link_model {link_model!r}; "
+                             "expected 'constant' or 'budget'")
+        link_model = LinkBudget() if link_model == "budget" else None
     plan = None
-    if algorithm.isl:
+    if algorithm.isl or link_model is not None:
         # The cached plan's geometry is workload-independent, its rates
         # are not: re-rate with the workload's HardwareModel so a slower
         # radio (Workload.link_mbps) shrinks every window's byte volume
-        # (ROADMAP "per-workload link budgets").
-        link = (HardwareModel.for_workload(workload).link_mbps
-                if workload is not None else None)
-        if link == HardwareModel().link_mbps:
-            link = None          # default platform: share the base plan
+        # (ROADMAP "per-workload link budgets"), or with the requested
+        # range-dependent budget.
+        link = link_model
+        if link is None and workload is not None:
+            mbps = HardwareModel.for_workload(workload).link_mbps
+            if not math.isclose(mbps, HardwareModel().link_mbps):
+                link = mbps      # non-default radio; default shares the
+                                 # base plan (float-exact check was fragile)
         plan = contact_plan(clusters, sats, n_stations, horizon_s, link)
     cfg = SimConfig(max_rounds=rounds, horizon_s=horizon_s, train=train,
                     eval_every=eval_every, seed=seed)

@@ -27,23 +27,25 @@ from benchmarks import (
 )
 from benchmarks.common import emit
 
-# Every suite takes (full, execution); suites that never run gradients
-# ignore the execution axis (it only changes how gradients run). The
-# Table-1 sweep is timing-only by default, so requesting an execution
-# mode switches it to real training (otherwise the rows would be
-# mislabelled host numbers).
+# Every suite takes (full, execution, link_model); suites that never run
+# gradients ignore the execution axis (it only changes how gradients
+# run), and only the Table-1 sweep carries the link-model axis (it owns
+# the comms-pricing claims). The sweep is timing-only by default, so
+# requesting an execution mode switches it to real training (otherwise
+# the rows would be mislabelled host numbers).
 SUITES = {
-    "kernels": lambda full, ex: bench_kernels.run(),
-    "round_duration": lambda full, ex: bench_round_duration.run(
+    "kernels": lambda full, ex, lm: bench_kernels.run(),
+    "round_duration": lambda full, ex, lm: bench_round_duration.run(
         quick=not full),
-    "idle": lambda full, ex: bench_idle.run(quick=not full),
-    "speedup": lambda full, ex: bench_speedup.run(
+    "idle": lambda full, ex, lm: bench_idle.run(quick=not full),
+    "speedup": lambda full, ex, lm: bench_speedup.run(
         train=True, rounds=150 if full else 100, execution=ex),
-    "accuracy": lambda full, ex: bench_accuracy.run(
+    "accuracy": lambda full, ex, lm: bench_accuracy.run(
         quick=not full, rounds=150 if full else 100, execution=ex),
-    "sweep768": lambda full, ex: bench_sweep.run(
-        quick=not full, train=ex is not None, execution=ex),
-    "roofline": lambda full, ex: bench_roofline.run(),
+    "sweep768": lambda full, ex, lm: bench_sweep.run(
+        quick=not full, train=ex is not None, execution=ex,
+        link_model=lm),
+    "roofline": lambda full, ex, lm: bench_roofline.run(),
 }
 
 DEFAULT_JSON = os.path.join(os.path.dirname(__file__), "..",
@@ -58,11 +60,17 @@ def main(argv=None) -> None:
                     help="machine-readable artifact path ('' disables)")
     ap.add_argument("--execution", default=None, choices=("host", "mesh"),
                     help="client-update execution mode for training suites")
+    ap.add_argument("--link-model", default=None,
+                    choices=("constant", "budget"),
+                    help="comms pricing for the Table-1 sweep (budget = "
+                         "slant-range LinkBudget re-rated from cached "
+                         "plan geometry)")
     args = ap.parse_args(argv)
 
     artifact: dict = {"schema": 1, "generated_unix": round(time.time(), 1),
                       "full": bool(args.full), "only": args.only,
                       "execution": args.execution,
+                      "link_model": args.link_model,
                       "suites": {}}
     names = [args.only] if args.only else list(SUITES)
     t_total = time.time()
@@ -70,7 +78,7 @@ def main(argv=None) -> None:
         print(f"# ==== {name} ====")
         t0 = time.time()
         try:
-            rows = SUITES[name](args.full, args.execution)
+            rows = SUITES[name](args.full, args.execution, args.link_model)
             emit(rows)
             wall = time.time() - t0
             print(f"# {name}: {len(rows)} rows in {wall:.1f}s")

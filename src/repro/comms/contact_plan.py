@@ -11,21 +11,58 @@ selector/routing layers query:
 Each window carries an achievable `rate_bps` so transfer time varies with
 geometry. With the default `ConstantRate` link models the plan reproduces
 the seed's constant-`LINK_MBPS` arithmetic exactly (back-compat).
+
+Geometry cache
+--------------
+Window extraction is the expensive, link-independent part of a plan (a
+90-day horizon re-propagates every orbit); the *rates* are cheap. To make
+re-pricing cheap too, `build_contact_plan` can cache per-window slant
+ranges alongside the windows (`cache_geometry=True`, or automatically
+whenever a geometry-dependent link forces propagation anyway):
+
+  * every window stores its midpoint slant range (`mid_range_m`);
+  * ground windows additionally store a `range_samples`-point piecewise
+    range profile across the pass (`range_profile`), so a `LinkBudget`
+    prices a long pass as a time-varying rate rather than one midpoint
+    number — `next_ground_upload`/`next_isl_transfer` integrate the
+    resulting `rate_profile` (trapezoid rule) when it is present.
+
+Ground windows are the merged per-satellite passes of `AccessWindows`
+(the same window set the constant-rate path uses); at each geometry
+sample the effective range is the range to the *nearest station whose
+own pass covers that instant* (the satellite downlinks to the best
+visible station).
+
+`ContactPlan.rerate` re-prices a cached plan with **any** `LinkModel` —
+`ConstantRate` output is bitwise-identical to a fresh constant-rate
+build, and `LinkBudget` output matches a from-scratch geometry build
+without a single new propagation call.
 """
 from __future__ import annotations
 
 import bisect
 import dataclasses
+import math
 
 import numpy as np
 
 from repro.comms.isl import ISLWindows
-from repro.comms.links import ConstantRate, LinkModel, slant_range_m
+from repro.comms.links import (
+    MIN_RATE_BPS,
+    ConstantRate,
+    LinkModel,
+    slant_range_m,
+)
 from repro.orbits.access import AccessWindows
-from repro.orbits.propagation import eci_positions, gs_eci_positions
+from repro.orbits.propagation import eci_positions_np, gs_eci_positions_np
 from repro.orbits.stations import station_latlon
 
 Edge = tuple  # ("gs", k) | ("isl", i, j) with i < j
+
+# Ground-pass range profiles: slant ranges sampled at this many evenly
+# spaced instants per window (endpoints included).
+DEFAULT_RANGE_SAMPLES = 5
+
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +81,34 @@ class ContactWindow:
         return self.duration_s * self.rate_bps / 8.0
 
 
+def _profile_tx_end(times: np.ndarray, rates: np.ndarray, t0: float,
+                    n_bits: float) -> float:
+    """Completion time of an `n_bits` transfer starting at `t0` over a
+    piecewise-linear rate profile (trapezoid integration). Past the last
+    sample the final rate holds, so ground uploads may overrun the pass
+    exactly like the constant-rate path."""
+    r = np.maximum(np.asarray(rates, float), MIN_RATE_BPS)
+    remaining = float(n_bits)
+    t = float(t0)
+    for i in range(len(times) - 1):
+        ta, tb = float(times[i]), float(times[i + 1])
+        if tb <= t or tb <= ta:
+            continue
+        a = max(t, ta)
+        m = (float(r[i + 1]) - float(r[i])) / (tb - ta)
+        ra = float(r[i]) + m * (a - ta)
+        seg_bits = 0.5 * (ra + float(r[i + 1])) * (tb - a)
+        if seg_bits >= remaining:
+            if abs(m) < 1e-12:
+                return a + remaining / max(ra, MIN_RATE_BPS)
+            # Solve ra*x + m*x^2/2 = remaining for the in-segment offset.
+            disc = ra * ra + 2.0 * m * remaining
+            return a + (math.sqrt(max(disc, 0.0)) - ra) / m
+        remaining -= seg_bits
+        t = tb
+    return t + remaining / max(float(r[-1]), MIN_RATE_BPS)
+
+
 @dataclasses.dataclass
 class _EdgeWindows:
     """Start-sorted parallel arrays for one edge.
@@ -52,11 +117,25 @@ class _EdgeWindows:
     necessarily sorted; queries bisect `cummax_ends` (running max of
     `ends`, always non-decreasing) to find the first index whose window
     outlives t.
+
+    The optional geometry fields are the build-time cache that lets
+    `ContactPlan.rerate` price these windows with a range-dependent
+    `LinkModel` without re-propagating:
+
+      mid_range_m:   (M,) slant range at each window's midpoint;
+      range_profile: (M, S) slant ranges at S evenly spaced instants
+                     spanning each window (ground passes only);
+      rate_profile:  (M, S) achievable rate at the profile instants under
+                     the *current* pricing (None for geometry-free links,
+                     whose rate is flat across the pass).
     """
 
     starts: np.ndarray
     ends: np.ndarray
     rates: np.ndarray
+    mid_range_m: np.ndarray | None = None
+    range_profile: np.ndarray | None = None
+    rate_profile: np.ndarray | None = None
     cummax_ends: np.ndarray = dataclasses.field(init=False)
 
     def __post_init__(self):
@@ -71,6 +150,46 @@ class _EdgeWindows:
         the running max of `ends` first exceeds t, the max was raised by
         that very window, and every earlier window has already closed."""
         return bisect.bisect_right(self.cummax_ends, t)
+
+    def tx_end(self, i: int, tx_start: float, n_bytes: float) -> float:
+        """When an `n_bytes` transfer starting at `tx_start` inside
+        window `i` completes: piecewise-integrated when a rate profile is
+        present, else the window's flat rate (floored at `MIN_RATE_BPS`).
+        """
+        n_bits = n_bytes * 8
+        if self.rate_profile is not None:
+            times = np.linspace(float(self.starts[i]), float(self.ends[i]),
+                                self.rate_profile.shape[1])
+            return _profile_tx_end(times, self.rate_profile[i], tx_start,
+                                   n_bits)
+        return tx_start + n_bits / max(float(self.rates[i]), MIN_RATE_BPS)
+
+
+def _priced_windows(starts: np.ndarray, ends: np.ndarray, link: LinkModel,
+                    kind: str, mid_range_m: np.ndarray | None = None,
+                    range_profile: np.ndarray | None = None) -> _EdgeWindows:
+    """Price one edge's windows with `link`, carrying the geometry cache
+    through. This is the single pricing path shared by
+    `build_contact_plan` and `ContactPlan.rerate`, so a cached-then-
+    re-rated plan reproduces a from-scratch build exactly."""
+    if link.geometry_free:
+        return _EdgeWindows(starts, ends,
+                            np.full(len(starts), float(link.rate_bps())),
+                            mid_range_m=mid_range_m,
+                            range_profile=range_profile)
+    if len(starts) and mid_range_m is None:
+        raise ValueError(
+            f"no cached geometry on {kind} windows: rebuild with "
+            "build_contact_plan(constellation=..., stations=..., "
+            "cache_geometry=True) before re-rating with a "
+            "range-dependent LinkBudget")
+    rates = (np.asarray(link.rate_bps(mid_range_m), float).reshape(-1)
+             if len(starts) else np.empty(0))
+    rate_profile = (np.asarray(link.rate_bps(range_profile), float)
+                    if range_profile is not None else None)
+    return _EdgeWindows(starts, ends, rates, mid_range_m=mid_range_m,
+                        range_profile=range_profile,
+                        rate_profile=rate_profile)
 
 
 @dataclasses.dataclass
@@ -111,6 +230,8 @@ class ContactPlan:
         required to fit inside the window (tx times are ms against
         minute-scale passes); with constant rates the result is therefore
         identical to `next_window(k, t)` + the constant transfer time.
+        Windows carrying a rate profile are integrated piecewise, so the
+        upload slows down toward the faded edges of a pass.
         """
         ew = self.ground[k]
         i = ew.first_live(t)
@@ -123,7 +244,7 @@ class ContactPlan:
             if best is not None and s >= best[1]:
                 break  # no later window can complete earlier
             tx_start = max(s, t)
-            tx_end = tx_start + n_bytes * 8 / float(ew.rates[i])
+            tx_end = ew.tx_end(i, tx_start, n_bytes)
             if best is None or tx_end < best[1]:
                 best = (tx_start, tx_end)
             i += 1
@@ -144,7 +265,7 @@ class ContactPlan:
                 w += 1
                 continue
             s = max(float(ew.starts[w]), t)
-            e = s + n_bytes * 8 / float(ew.rates[w])
+            e = ew.tx_end(w, s, n_bytes)
             if e <= float(ew.ends[w]):
                 return (s, e)
             w += 1
@@ -154,47 +275,91 @@ class ContactPlan:
         return self.neighbors.get(k, [])
 
     # ----------------------------------------------------------- re-rate --
-    def rerate(self, ground_link: LinkModel,
+    def rerate(self, ground_link: LinkModel | None,
                isl_link: LinkModel | None = None) -> "ContactPlan":
         """This plan's geometry, re-priced by different link models.
 
         Contact windows are orbital facts and survive unchanged; only the
         per-window achievable rates are recomputed. This is what lets a
-        cached plan be shared across workloads: the expensive part (window
-        extraction) is workload-independent, while the rates must follow
-        each workload's `HardwareModel` (a heavier model or a slower radio
-        can make an ISL window too short to fit a transfer). Only
-        geometry-free links can be re-priced without re-propagating; pass
-        a `LinkBudget` through `build_contact_plan` instead.
+        cached plan be shared across workloads and link models: the
+        expensive part (window extraction + slant-range sampling) is
+        priced once, while the rates follow each caller's radio.
+
+        * Geometry-free links (`ConstantRate`) re-price any plan; the
+          result is bitwise-identical to a fresh constant-rate build.
+        * Range-dependent links (`LinkBudget`) re-price plans that carry
+          the geometry cache (`build_contact_plan(...,
+          cache_geometry=True)`), reusing the stored midpoint ranges and
+          pass profiles — zero propagation. Plans without cached
+          geometry raise ValueError.
+
+        Either side may be None to keep that side's current pricing:
+        `ground_link=None` leaves ground windows verbatim; `isl_link`
+        defaults to `ground_link` when that is given (the historical
+        one-radio behaviour), else also keeps its current pricing.
         """
-        isl_link = isl_link or ground_link
-        if not (ground_link.geometry_free and isl_link.geometry_free):
-            raise ValueError("rerate() only supports geometry-free links; "
-                             "rebuild with build_contact_plan for a "
-                             "range-dependent LinkBudget")
-        g_rate = float(ground_link.rate_bps())
-        i_rate = float(isl_link.rate_bps())
-        ground = [_EdgeWindows(ew.starts, ew.ends,
-                               np.full(len(ew.starts), g_rate))
-                  for ew in self.ground]
-        isl = {e: _EdgeWindows(ew.starts, ew.ends,
-                               np.full(len(ew.starts), i_rate))
-               for e, ew in self.isl.items()}
+        if isl_link is None:
+            isl_link = ground_link
+        ground = (self.ground if ground_link is None else
+                  [_priced_windows(ew.starts, ew.ends, ground_link,
+                                   "ground", mid_range_m=ew.mid_range_m,
+                                   range_profile=ew.range_profile)
+                   for ew in self.ground])
+        isl = (self.isl if isl_link is None else
+               {e: _priced_windows(ew.starts, ew.ends, isl_link, "ISL",
+                                   mid_range_m=ew.mid_range_m,
+                                   range_profile=ew.range_profile)
+                for e, ew in self.isl.items()})
         return ContactPlan(n_sats=self.n_sats, ground=ground, isl=isl,
                            neighbors=self.neighbors, horizon_s=self.horizon_s)
 
 
 # ---------------------------------------------------------------- build --
-def _midpoint_rates(link: LinkModel, ranges_m: np.ndarray) -> np.ndarray:
-    return np.asarray(link.rate_bps(ranges_m), dtype=float).reshape(-1)
-
-
 def _elements_of(elements: dict, ks) -> dict:
-    """Slice per-satellite orbital elements so `eci_positions` propagates
-    only the satellites named in `ks` (not the whole constellation)."""
+    """Slice per-satellite orbital elements so position sampling
+    propagates only the satellites named in `ks` (not the whole
+    constellation)."""
     return {"raan": np.asarray(elements["raan"])[ks],
             "anomaly0": np.asarray(elements["anomaly0"])[ks],
             "a": elements["a"], "inc": elements["inc"]}
+
+
+def _ground_geometry(k: int, starts: np.ndarray, ends: np.ndarray,
+                     aw: AccessWindows, elements: dict, lat, lon,
+                     range_samples: int
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Slant-range cache for one satellite's merged ground windows.
+
+    One propagation call prices every midpoint AND every profile sample
+    (the float64 NumPy twins of the propagation kernels: host-side
+    geometry makes thousands of tiny calls where JAX dispatch overhead
+    would dominate). At each instant the effective range is the range to
+    the nearest station whose own (per-station) pass covers that instant
+    — the satellite downlinks to the best visible station. An instant no
+    station covers (float dust at merged-window edges) falls back to the
+    nearest station outright.
+    """
+    S = max(int(range_samples), 2)
+    mids = (starts + ends) / 2.0
+    frac = np.linspace(0.0, 1.0, S)
+    prof_t = starts[:, None] + (ends - starts)[:, None] * frac[None, :]
+    times = np.concatenate([mids, prof_t.reshape(-1)])
+    sat = eci_positions_np(_elements_of(elements, [k]), times)[0]  # (T, 3)
+    gs = gs_eci_positions_np(lat, lon, times)                  # (G, T, 3)
+    rng = slant_range_m(sat[None, :, :], gs)                   # (G, T)
+    covered = np.zeros(rng.shape, bool)
+    for g, (sg, eg) in enumerate(aw.per_sat_station[k]):
+        if len(sg) == 0:
+            continue
+        sg = np.asarray(sg, float)
+        eg = np.asarray(eg, float)
+        idx = np.searchsorted(sg, times, side="right") - 1
+        ok = idx >= 0
+        covered[g, ok] = times[ok] <= eg[idx[ok]]
+    eff = np.where(covered, rng, np.inf).min(axis=0)
+    eff = np.where(np.isfinite(eff), eff, rng.min(axis=0))
+    M = len(starts)
+    return eff[:M], eff[M:].reshape(M, S)
 
 
 def build_contact_plan(
@@ -204,75 +369,70 @@ def build_contact_plan(
     isl_link: LinkModel | None = None,
     constellation=None,
     stations=None,
+    cache_geometry: bool | None = None,
+    range_samples: int = DEFAULT_RANGE_SAMPLES,
 ) -> ContactPlan:
     """Compile access + ISL windows into a rate-annotated `ContactPlan`.
 
     Geometry-free (`ConstantRate`) links skip propagation entirely; a
-    `LinkBudget` prices each window by the slant range at its midpoint,
-    which requires `constellation` (and `stations` for ground edges).
+    `LinkBudget` prices ground passes from a `range_samples`-point slant-
+    range profile (midpoint rate as the window's headline `rate_bps`) and
+    ISL windows from their midpoint range, which requires `constellation`
+    (and `stations` for ground edges).
+
+    `cache_geometry=True` stores those per-window slant ranges on the
+    plan even under constant-rate pricing, so `ContactPlan.rerate` can
+    later re-price it with any `LinkModel` without re-propagating; the
+    default (None) caches exactly when a geometry-dependent link forces
+    the propagation anyway.
     """
     ground_link = ground_link or ConstantRate()
     isl_link = isl_link or ground_link
     K = aw.n_sats
 
+    need_ground_geom = not ground_link.geometry_free or bool(cache_geometry)
+    need_isl_geom = (isl_windows is not None and
+                     (not isl_link.geometry_free or bool(cache_geometry)))
+    if need_ground_geom and (constellation is None or stations is None):
+        raise ValueError("geometry-dependent ground link needs "
+                         "constellation + stations for slant ranges")
+    if need_isl_geom and constellation is None:
+        raise ValueError("geometry-dependent ISL link needs constellation "
+                         "for slant ranges")
+    elements = (constellation.elements()
+                if need_ground_geom or need_isl_geom else None)
+
     ground: list[_EdgeWindows] = []
-    if ground_link.geometry_free:
-        rate = float(ground_link.rate_bps())
-        for k in range(K):
-            s, e = aw.per_sat[k]
-            ground.append(_EdgeWindows(np.asarray(s, float),
-                                       np.asarray(e, float),
-                                       np.full(len(s), rate)))
-    else:
-        if constellation is None or stations is None:
-            raise ValueError("geometry-dependent ground link needs "
-                             "constellation + stations for slant ranges")
-        elements = constellation.elements()
+    if need_ground_geom:
         lat, lon = station_latlon(stations)
-        for k in range(K):
-            starts, ends, gidx = [], [], []
-            for g, (s_arr, e_arr) in enumerate(aw.per_sat_station[k]):
-                starts.extend(map(float, s_arr))
-                ends.extend(map(float, e_arr))
-                gidx.extend([g] * len(s_arr))
-            if not starts:
-                ground.append(_EdgeWindows(np.empty(0), np.empty(0),
-                                           np.empty(0)))
-                continue
-            starts = np.asarray(starts, float)
-            ends = np.asarray(ends, float)
-            gidx = np.asarray(gidx)
-            mids = (starts + ends) / 2.0
-            # One per-satellite propagation prices every window midpoint.
-            sat = np.asarray(eci_positions(_elements_of(elements, [k]),
-                                           mids))[0]             # (M, 3)
-            gs = np.asarray(gs_eci_positions(lat, lon, mids))     # (G, M, 3)
-            rng = slant_range_m(sat, gs[gidx, np.arange(len(mids))])
-            rates = _midpoint_rates(ground_link, rng)
-            order = np.argsort(starts, kind="stable")
-            ground.append(_EdgeWindows(starts[order], ends[order],
-                                       rates[order]))
+    for k in range(K):
+        s_arr, e_arr = aw.per_sat[k]
+        starts = np.asarray(s_arr, float)
+        ends = np.asarray(e_arr, float)
+        mid = prof = None
+        if need_ground_geom and len(starts):
+            mid, prof = _ground_geometry(k, starts, ends, aw, elements,
+                                         lat, lon, range_samples)
+        ground.append(_priced_windows(starts, ends, ground_link, "ground",
+                                      mid_range_m=mid, range_profile=prof))
 
     isl: dict[tuple[int, int], _EdgeWindows] = {}
     neighbors: dict[int, list[int]] = {}
     if isl_windows is not None and isl_windows.n_edges:
-        elements = (constellation.elements()
-                    if constellation is not None and
-                    not isl_link.geometry_free else None)
         for (i, j), (s_arr, e_arr) in zip(isl_windows.edges,
                                           isl_windows.per_edge):
             if len(s_arr) == 0:
                 continue
-            if isl_link.geometry_free or elements is None:
-                rates = np.full(len(s_arr), float(isl_link.rate_bps()))
-            else:
-                mids = (np.asarray(s_arr) + np.asarray(e_arr)) / 2.0
-                pos = np.asarray(eci_positions(
-                    _elements_of(elements, [i, j]), mids))       # (2, M, 3)
-                rng = slant_range_m(pos[0], pos[1])
-                rates = _midpoint_rates(isl_link, rng)
-            isl[(i, j)] = _EdgeWindows(np.asarray(s_arr, float),
-                                       np.asarray(e_arr, float), rates)
+            starts = np.asarray(s_arr, float)
+            ends = np.asarray(e_arr, float)
+            mid = None
+            if need_isl_geom:
+                mids = (starts + ends) / 2.0
+                pos = eci_positions_np(
+                    _elements_of(elements, [i, j]), mids)      # (2, M, 3)
+                mid = slant_range_m(pos[0], pos[1])
+            isl[(i, j)] = _priced_windows(starts, ends, isl_link, "ISL",
+                                          mid_range_m=mid)
             neighbors.setdefault(i, []).append(j)
             neighbors.setdefault(j, []).append(i)
 

@@ -20,6 +20,13 @@ from repro.orbits import constants as C
 SPEED_OF_LIGHT = 299_792_458.0          # [m/s]
 BOLTZMANN_DBW = -228.6                  # 10*log10(k_B), [dBW/K/Hz]
 
+# Deep-fade floor: a link budget can quote a rate arbitrarily close to
+# zero; every transfer-time division floors the rate here so a faded
+# window yields a uselessly-long-but-finite transfer instead of
+# inf/ZeroDivisionError. Shared by `LinkBudget.tx_time_s`, the
+# contact-plan transfer math, and `HardwareModel.tx_time_for`.
+MIN_RATE_BPS = 1.0
+
 
 def slant_range_m(a_pos: np.ndarray, b_pos: np.ndarray) -> np.ndarray:
     """Euclidean range between two position sets (..., 3) [m]."""
@@ -57,19 +64,21 @@ class LinkBudget:
     rate(d) = min(max_rate, bandwidth * log2(1 + SNR(d))), with
     SNR from  EIRP + G/T - FSPL(d) - k_B - 10 log10(B).
 
-    Defaults model an X-band LEO downlink sized so the rate at
-    `ref_range_m` is close to the paper's 580 Mbps telemetry figure.
+    Defaults model an X-band LEO downlink calibrated so the rate at
+    `ref_range_m` (1000 km slant range) is the paper's 580 Mbps
+    telemetry figure — `ref_rate_bps` exposes the anchor, and
+    `tests/test_geometry_rerate.py` pins it.
     """
 
     frequency_hz: float = 8.2e9          # X-band
     bandwidth_hz: float = 375e6
     tx_power_dbw: float = 10.0           # 10 W
-    tx_gain_dbi: float = 30.0
+    tx_gain_dbi: float = 15.7            # sized so rate(ref_range_m) ~ 580 Mbps
     rx_gain_dbi: float = 35.0
     system_noise_k: float = 500.0
     losses_db: float = 3.0               # pointing + atmosphere + margin
     max_rate_bps: float = 1.2e9          # modem ceiling
-    ref_range_m: float = 1_000e3         # documentation anchor, not used
+    ref_range_m: float = 1_000e3         # calibration anchor (see ref_rate_bps)
 
     @property
     def geometry_free(self) -> bool:
@@ -93,8 +102,16 @@ class LinkBudget:
         shannon = self.bandwidth_hz * np.log2(1.0 + snr)
         return np.minimum(shannon, self.max_rate_bps)
 
+    @property
+    def ref_rate_bps(self) -> float:
+        """Achievable rate at the calibration anchor `ref_range_m` —
+        ~`LINK_MBPS` for the default budget, so constant-rate and
+        budget-priced plans agree at the reference geometry."""
+        return float(self.rate_bps(self.ref_range_m))
+
     def tx_time_s(self, n_bytes: float, range_m: float) -> float:
-        return float(n_bytes * 8 / max(float(self.rate_bps(range_m)), 1.0))
+        return float(n_bytes * 8
+                     / max(float(self.rate_bps(range_m)), MIN_RATE_BPS))
 
 
 LinkModel = ConstantRate | LinkBudget

@@ -7,6 +7,13 @@ next contact window) to a peer with an earlier pass — recursively, up to
 `max_hops` ISL legs. Dijkstra over (satellite, arrival-time) labels finds
 the route whose *server arrival* is earliest; the original satellite keeps
 priority on ties (a relay must strictly beat the direct upload).
+
+Per-leg transfer times come from the plan's own window pricing
+(`next_isl_transfer` / `next_ground_upload`), so routes automatically
+follow whatever rate model priced the plan: constant telemetry, midpoint
+link budgets, or piecewise range profiles — a deep-fade window prices a
+leg so slowly that the transfer no longer fits and the router detours or
+falls back to the direct upload.
 """
 from __future__ import annotations
 

@@ -38,12 +38,17 @@ class HardwareModel:
                     rate_bps: float | None = None) -> float:
         """Transfer time for `n_bytes` at `rate_bps` (rate/bytes-aware
         variant of `tx_time_s`; both default to the model's constants, so
-        `tx_time_for()` == `tx_time_s` bit for bit)."""
+        `tx_time_for()` == `tx_time_s` bit for bit). A deep-fade
+        `LinkBudget` window can quote a rate arbitrarily close to zero,
+        so the division applies the shared deep-fade floor
+        (`repro.comms.links.MIN_RATE_BPS`), matching the contact-plan
+        transfer math."""
+        from repro.comms.links import MIN_RATE_BPS
         if n_bytes is None:
             n_bytes = self.model_bytes
         if rate_bps is None:
             rate_bps = self.link_mbps * 1e6
-        return (n_bytes * 8) / rate_bps
+        return (n_bytes * 8) / max(rate_bps, MIN_RATE_BPS)
 
     def epochs_between(self, t0: float, t1: float, *, cap: bool = True) -> int:
         """How many whole local epochs fit in [t0, t1)."""

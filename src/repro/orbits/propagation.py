@@ -56,6 +56,34 @@ def eci_positions(elements: dict, t: jax.Array) -> jax.Array:
     return jnp.stack([x, y, z], axis=-1)  # (K,T,3)
 
 
+def eci_positions_np(elements: dict, t: np.ndarray) -> np.ndarray:
+    """NumPy float64 twin of `eci_positions` (same formulas, same axes).
+
+    Host-side geometry sampling (contact-plan slant-range caches) makes
+    thousands of tiny per-satellite / per-edge calls whose JAX dispatch
+    overhead would dominate the actual trig; it also wants float64 time
+    grids (float32 seconds lose ~0.5 s of resolution over a 90-day
+    horizon). Parity with the JAX version is pinned in tests.
+    """
+    raan = np.asarray(elements["raan"], dtype=float)[:, None]      # (K,1)
+    n = np.sqrt(MU_EARTH / float(np.asarray(elements["a"])) ** 3)
+    theta = (np.asarray(elements["anomaly0"], dtype=float)[:, None]
+             + n * np.asarray(t, dtype=float)[None, :])            # (K,T)
+    a = float(np.asarray(elements["a"]))
+    inc = float(np.asarray(elements["inc"]))
+
+    xp = a * np.cos(theta)
+    yp = a * np.sin(theta)
+
+    cos_i, sin_i = np.cos(inc), np.sin(inc)
+    cos_O, sin_O = np.cos(raan), np.sin(raan)
+
+    x = cos_O * xp - sin_O * cos_i * yp
+    y = sin_O * xp + cos_O * cos_i * yp
+    z = sin_i * yp
+    return np.stack([x, y, z], axis=-1)  # (K,T,3)
+
+
 def gs_eci_positions(lat_deg: jax.Array, lon_deg: jax.Array, t: jax.Array,
                      gmst0: float = 0.0) -> jax.Array:
     """Ground-station ECI positions on the rotating earth.
@@ -76,6 +104,19 @@ def gs_eci_positions(lat_deg: jax.Array, lon_deg: jax.Array, t: jax.Array,
     y = R_EARTH * cos_lat * jnp.sin(ang)
     z = R_EARTH * jnp.sin(lat) * jnp.ones_like(ang)
     return jnp.stack([x, y, z], axis=-1)                 # (G,T,3)
+
+
+def gs_eci_positions_np(lat_deg, lon_deg, t: np.ndarray,
+                        gmst0: float = 0.0) -> np.ndarray:
+    """NumPy float64 twin of `gs_eci_positions` (see `eci_positions_np`)."""
+    lat = np.deg2rad(np.asarray(lat_deg, dtype=float))[:, None]    # (G,1)
+    lon = np.deg2rad(np.asarray(lon_deg, dtype=float))[:, None]
+    ang = lon + gmst0 + OMEGA_EARTH * np.asarray(t, dtype=float)[None, :]
+    cos_lat = np.cos(lat)
+    x = R_EARTH * cos_lat * np.cos(ang)
+    y = R_EARTH * cos_lat * np.sin(ang)
+    z = R_EARTH * np.sin(lat) * np.ones_like(ang)
+    return np.stack([x, y, z], axis=-1)                 # (G,T,3)
 
 
 def elevation_deg(sat_eci: jax.Array, gs_eci: jax.Array) -> jax.Array:

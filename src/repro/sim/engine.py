@@ -153,7 +153,16 @@ class ConstellationSim:
         # plan against a ContactPlan; everything else keeps the seed's
         # AccessWindows-only path, bit for bit.
         self.plan = contact_plan
-        if self.plan is None and (algorithm.isl or link_model is not None):
+        if self.plan is not None and (link_model is not None
+                                      or isl_link is not None):
+            # A cached plan is geometry, not pricing: re-rate it with the
+            # requested link models (zero re-propagation; a LinkBudget
+            # needs the plan's cached slant ranges). `rerate` semantics:
+            # a lone link_model prices both sides (one-radio default); a
+            # lone isl_link re-prices ISLs and keeps the plan's ground
+            # pricing verbatim.
+            self.plan = self.plan.rerate(link_model, isl_link)
+        elif self.plan is None and (algorithm.isl or link_model is not None):
             ground = link_model or ConstantRate(self.hw.link_mbps)
             iw = None
             if algorithm.isl:

@@ -244,8 +244,9 @@ def test_isl_sim_reports_hops_and_bytes(ring10):
 
 
 def test_link_budget_plan_multi_station_agrees_with_access():
-    """Geometry-priced ground windows (unmerged, possibly overlapping)
-    must agree with the merged AccessWindows on contact existence."""
+    """Geometry-priced ground windows are the *same merged passes* as
+    AccessWindows (priced at each instant against the nearest visible
+    station), so contact existence and window extents must agree."""
     c = WalkerStar(1, 2)
     st = station_subnetwork(3)
     aw = compute_access_windows(c, st, horizon_s=2 * 86400.0)
@@ -257,9 +258,8 @@ def test_link_budget_plan_multi_station_agrees_with_access():
             w_plan = plan.next_window(("gs", k), float(t))
             assert (w_merged is None) == (w_plan is None)
             if w_merged is not None:
-                # Same next usable contact instant; the plan's window may
-                # end earlier (it is a single station's pass, not a merge).
                 assert w_plan.start == pytest.approx(w_merged[0])
+                assert w_plan.end == pytest.approx(w_merged[1])
                 assert w_plan.rate_bps > 0
 
 

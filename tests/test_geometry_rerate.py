@@ -1,0 +1,359 @@
+"""Geometry-cached re-rating: LinkBudget pricing of cached contact plans.
+
+The paper's 768-configuration sweep reuses one window-extraction pass per
+scenario; these tests pin the property that makes that reuse sound for
+*range-dependent* links too: `build_contact_plan(cache_geometry=True)`
+stores per-window slant ranges (midpoint + pass profiles), and
+`ContactPlan.rerate(LinkBudget())` reproduces a from-scratch geometry
+build with zero new propagation calls. Plus the comms-pricing bugfix
+cluster: explicit ISL geometry errors, deep-fade rate floors, and the
+LinkBudget calibration anchor.
+"""
+import numpy as np
+import pytest
+
+import repro.comms.contact_plan as cp_mod
+from repro.comms import (
+    ConstantRate,
+    LinkBudget,
+    build_contact_plan,
+    compute_isl_windows,
+    earliest_arrival,
+)
+from repro.comms.contact_plan import ContactPlan, _EdgeWindows
+from repro.core import ALGORITHMS
+from repro.orbits import (
+    WalkerStar,
+    compute_access_windows,
+    constants as C,
+    station_subnetwork,
+)
+from repro.sim import ConstellationSim, SimConfig
+
+HORIZON = 2 * 86400.0
+
+
+@pytest.fixture(scope="module")
+def scene():
+    """Dense ring (live ISLs) over two stations, 2-day horizon."""
+    c = WalkerStar(1, 10)
+    st = station_subnetwork(2)
+    aw = compute_access_windows(c, st, horizon_s=HORIZON)
+    iw = compute_isl_windows(c, horizon_s=HORIZON)
+    return c, st, aw, iw
+
+
+@pytest.fixture(scope="module")
+def cached_plan(scene):
+    c, st, aw, iw = scene
+    return build_contact_plan(aw, iw, ConstantRate(), constellation=c,
+                              stations=st, cache_geometry=True)
+
+
+# ------------------------------------------------------- calibration --
+def test_default_budget_calibrated_at_ref_range():
+    """The default LinkBudget is anchored to the paper's 580 Mbps
+    telemetry figure at `ref_range_m` (the field is load-bearing now)."""
+    lb = LinkBudget()
+    assert float(lb.rate_bps(lb.ref_range_m)) == \
+        pytest.approx(C.LINK_MBPS * 1e6, rel=0.01)
+    assert lb.ref_rate_bps == float(lb.rate_bps(lb.ref_range_m))
+
+
+# ------------------------------------------------- build-time errors --
+def test_isl_geometry_link_without_constellation_raises(scene):
+    """Regression: a geometry-dependent isl_link with constellation=None
+    used to fall into the geometry-free arm and die with a confusing
+    TypeError from `rate_bps()`; it must raise the same explicit
+    ValueError the ground branch does."""
+    _, _, aw, iw = scene
+    with pytest.raises(ValueError, match="ISL link needs constellation"):
+        build_contact_plan(aw, iw, ConstantRate(), LinkBudget())
+
+
+def test_cache_geometry_requires_constellation_and_stations(scene):
+    _, _, aw, _ = scene
+    with pytest.raises(ValueError, match="constellation"):
+        build_contact_plan(aw, None, ConstantRate(), cache_geometry=True)
+
+
+# ------------------------------------------------- geometry caching --
+def test_numpy_propagation_twins_match_jax():
+    """The float64 NumPy propagation twins used for geometry sampling
+    must agree with the JAX kernels that extracted the windows (float32
+    time grids bound the tolerance: ~0.01 s of along-track motion)."""
+    from repro.orbits.propagation import (
+        eci_positions,
+        eci_positions_np,
+        gs_eci_positions,
+        gs_eci_positions_np,
+    )
+    elements = WalkerStar(2, 3).elements()
+    t = np.linspace(0.0, 1e5, 57)
+    a = np.asarray(eci_positions(elements, t))
+    b = eci_positions_np(elements, t)
+    assert a.shape == b.shape
+    np.testing.assert_allclose(a, b, atol=300.0)       # meters
+    lat, lon = np.array([10.0, -60.0]), np.array([120.0, 30.0])
+    g = np.asarray(gs_eci_positions(lat, lon, t))
+    h = gs_eci_positions_np(lat, lon, t)
+    np.testing.assert_allclose(g, h, atol=300.0)
+
+def test_constant_rate_with_geometry_cache_is_bitwise(scene, cached_plan):
+    """Caching geometry must not perturb constant-rate pricing: windows
+    and rates are array-identical to a geometry-free build; the cache
+    rides along as extra fields."""
+    _, _, aw, iw = scene
+    plain = build_contact_plan(aw, iw, ConstantRate())
+    for k in range(plain.n_sats):
+        np.testing.assert_array_equal(plain.ground[k].starts,
+                                      cached_plan.ground[k].starts)
+        np.testing.assert_array_equal(plain.ground[k].ends,
+                                      cached_plan.ground[k].ends)
+        np.testing.assert_array_equal(plain.ground[k].rates,
+                                      cached_plan.ground[k].rates)
+        assert plain.ground[k].mid_range_m is None
+        if len(cached_plan.ground[k]):
+            assert cached_plan.ground[k].mid_range_m is not None
+            assert cached_plan.ground[k].range_profile is not None
+            # Geometry-free pricing never carries a rate profile, so the
+            # transfer arithmetic stays the seed's single division.
+            assert cached_plan.ground[k].rate_profile is None
+    for e in plain.isl:
+        np.testing.assert_array_equal(plain.isl[e].rates,
+                                      cached_plan.isl[e].rates)
+        assert cached_plan.isl[e].mid_range_m is not None
+
+
+def test_ground_profiles_are_physical(cached_plan):
+    """Pass profiles must bracket the midpoint: range is smallest near
+    culmination, so the midpoint range cannot exceed the profile max,
+    and every sample sits between LEO altitude and the horizon."""
+    ew = next(g for g in cached_plan.ground if len(g))
+    assert ew.range_profile.shape == (len(ew), cp_mod.DEFAULT_RANGE_SAMPLES)
+    assert (ew.range_profile >= 400e3).all()
+    assert (ew.range_profile <= 4000e3).all()
+    assert (ew.mid_range_m <= ew.range_profile.max(axis=1) + 1.0).all()
+
+
+# ---------------------------------------------------------- rerate --
+def test_rerate_budget_matches_from_scratch_zero_propagation(
+        scene, cached_plan, monkeypatch):
+    """Acceptance: re-rating the cached plan with a LinkBudget equals a
+    from-scratch geometry build within 1e-6 relative rate error — and
+    performs zero orbit propagation (spied)."""
+    c, st, aw, iw = scene
+    budget = LinkBudget()
+    scratch = build_contact_plan(aw, iw, budget, constellation=c,
+                                 stations=st)
+
+    calls = []
+
+    def spy(*a, **kw):
+        calls.append(a)
+        raise AssertionError("rerate must not propagate orbits")
+
+    monkeypatch.setattr(cp_mod, "eci_positions_np", spy)
+    rerated = cached_plan.rerate(budget)
+    assert calls == []
+
+    for k in range(scratch.n_sats):
+        np.testing.assert_array_equal(scratch.ground[k].starts,
+                                      rerated.ground[k].starts)
+        np.testing.assert_array_equal(scratch.ground[k].ends,
+                                      rerated.ground[k].ends)
+        np.testing.assert_allclose(rerated.ground[k].rates,
+                                   scratch.ground[k].rates, rtol=1e-6)
+        if len(scratch.ground[k]):
+            np.testing.assert_allclose(rerated.ground[k].rate_profile,
+                                       scratch.ground[k].rate_profile,
+                                       rtol=1e-6)
+    assert set(scratch.isl) == set(rerated.isl)
+    for e in scratch.isl:
+        np.testing.assert_allclose(rerated.isl[e].rates,
+                                   scratch.isl[e].rates, rtol=1e-6)
+    # Budget pricing actually varies with geometry (not a constant).
+    rates = np.concatenate([g.rates for g in rerated.ground if len(g)])
+    assert rates.std() > 0
+
+
+def test_rerate_back_to_constant_is_bitwise(scene, cached_plan):
+    """Round trip: budget-priced plans re-rate back to exactly the
+    constant plan (geometry survives every re-pricing)."""
+    _, _, aw, iw = scene
+    plain = build_contact_plan(aw, iw, ConstantRate())
+    back = cached_plan.rerate(LinkBudget()).rerate(ConstantRate())
+    for k in range(plain.n_sats):
+        np.testing.assert_array_equal(plain.ground[k].rates,
+                                      back.ground[k].rates)
+        assert back.ground[k].mid_range_m is not None or \
+            not len(back.ground[k])
+
+
+def test_rerate_without_cached_geometry_raises():
+    ew = _EdgeWindows(np.array([0.0]), np.array([100.0]), np.array([8e6]))
+    plan = ContactPlan(n_sats=1, ground=[ew], isl={}, neighbors={},
+                       horizon_s=1000.0)
+    with pytest.raises(ValueError, match="cached geometry"):
+        plan.rerate(LinkBudget())
+
+
+# ------------------------------------------------ piecewise pricing --
+def test_profile_integration_constant_profile_matches_flat_rate():
+    """A flat rate profile must integrate to exactly the single-division
+    transfer time (the piecewise path degenerates cleanly)."""
+    rate = 8e6
+    flat = _EdgeWindows(np.array([0.0]), np.array([100.0]),
+                        np.array([rate]))
+    prof = _EdgeWindows(np.array([0.0]), np.array([100.0]),
+                        np.array([rate]),
+                        mid_range_m=np.array([1e6]),
+                        range_profile=np.full((1, 5), 1e6),
+                        rate_profile=np.full((1, 5), rate))
+    n = 200_000.0
+    assert prof.tx_end(0, 10.0, n) == pytest.approx(flat.tx_end(0, 10.0, n),
+                                                    rel=1e-12)
+
+
+def test_profile_integration_front_loaded_rate():
+    """With a decreasing rate profile, early bits move fast: completing
+    a quarter of the window's capacity takes less than a quarter of the
+    window, and a transfer reaching into the faded tail takes longer
+    than the headline midpoint rate predicts."""
+    rates = np.array([[1600.0, 1200.0, 800.0, 400.0, 1.0]])
+    ew = _EdgeWindows(np.array([0.0]), np.array([100.0]),
+                      np.array([800.0]),        # midpoint headline rate
+                      rate_profile=rates)
+    r, seg = rates[0], 100.0 / 4
+    total_bits = float(((r[:-1] + r[1:]) / 2 * seg).sum())
+    t_quarter = ew.tx_end(0, 0.0, (total_bits / 4) / 8)
+    assert t_quarter < 25.0
+    # The full window moves exactly its integrated capacity.
+    t_all = ew.tx_end(0, 0.0, total_bits / 8)
+    assert t_all == pytest.approx(100.0, rel=1e-9)
+    # Past the last sample the final rate holds (overrun like the seed).
+    t_over = ew.tx_end(0, 0.0, total_bits / 8 + 100.0)
+    assert t_over == pytest.approx(100.0 + 800.0 / 1.0, rel=1e-6)
+
+
+def test_near_zero_rate_window_is_floored():
+    """Regression: a deep-fade window (rate ~ 0) must price transfers
+    with the same 1 bps floor `LinkBudget.tx_time_s` uses — finite
+    times, no ZeroDivisionError/inf."""
+    ew = _EdgeWindows(np.array([0.0]), np.array([100.0]),
+                      np.array([0.0]))
+    plan = ContactPlan(n_sats=1, ground=[ew],
+                       isl={(0, 1): ew}, neighbors={0: [1], 1: [0]},
+                       horizon_s=1000.0)
+    up = plan.next_ground_upload(0, 0.0, 1000.0)
+    assert up is not None and np.isfinite(up[1])
+    assert up[1] == pytest.approx(1000.0 * 8 / cp_mod.MIN_RATE_BPS)
+    # The faded ISL window can no longer fit the transfer: unusable,
+    # not a crash.
+    assert plan.next_isl_transfer(0, 1, 0.0, 1000.0) is None
+    # And a profile full of zeros is floored identically.
+    prof = _EdgeWindows(np.array([0.0]), np.array([100.0]),
+                        np.array([0.0]),
+                        rate_profile=np.zeros((1, 5)))
+    assert prof.tx_end(0, 0.0, 1000.0) == pytest.approx(
+        1000.0 * 8 / cp_mod.MIN_RATE_BPS, rel=1e-6)
+
+
+# --------------------------------------------------------- routing --
+def test_fading_makes_short_isl_window_unusable_and_reroutes():
+    """The relay race under re-pricing: at constant 580 Mbps the 100 s
+    ISL window carries the update to a peer with an early ground pass;
+    the budget prices the same window from its 4500 km cached range so
+    the transfer no longer fits and the route falls back to the source's
+    own (much later) pass."""
+    def ground(start, end, rng):
+        return _EdgeWindows(np.array([start]), np.array([end]),
+                            np.array([C.LINK_MBPS * 1e6]),
+                            mid_range_m=np.array([rng]),
+                            range_profile=np.full((1, 2), rng))
+
+    isl = _EdgeWindows(np.array([100.0]), np.array([200.0]),
+                       np.array([C.LINK_MBPS * 1e6]),
+                       mid_range_m=np.array([4500e3]))
+    plan = ContactPlan(
+        n_sats=2,
+        ground=[ground(50_000.0, 50_600.0, 800e3),
+                ground(1_000.0, 1_600.0, 800e3)],
+        isl={(0, 1): isl}, neighbors={0: [1], 1: [0]},
+        horizon_s=100_000.0)
+
+    n_bytes = 2e9           # 27.6 s at 580 Mbps; ~330 s at the faded rate
+    const_route = earliest_arrival(plan, 0, 0.0, n_bytes, max_hops=3)
+    assert const_route.path == (0, 1) and const_route.isl_hops == 1
+    assert const_route.arrival_s < 2_000.0
+
+    faded = plan.rerate(LinkBudget())
+    assert float(faded.isl[(0, 1)].rates[0]) < 100e6   # deep fade
+    assert faded.next_isl_transfer(0, 1, 0.0, n_bytes) is None
+    faded_route = earliest_arrival(faded, 0, 0.0, n_bytes, max_hops=3)
+    assert faded_route.path == (0,) and faded_route.isl_hops == 0
+    assert faded_route.arrival_s > const_route.arrival_s
+
+
+# ----------------------------------------------------- engine wiring --
+def test_engine_rerates_cached_plan(scene, cached_plan):
+    """`ConstellationSim(contact_plan=..., link_model=LinkBudget())`
+    re-prices the cached plan and matches an engine that builds the
+    budget plan from scratch."""
+    c, st, aw, _ = scene
+    cfg = SimConfig(max_rounds=3, horizon_s=HORIZON, train=False)
+    alg = ALGORITHMS["fedavg_intracc_isl"]
+    via_cache = ConstellationSim(c, st, alg, cfg=cfg, access=aw,
+                                 contact_plan=cached_plan,
+                                 link_model=LinkBudget()).run()
+    from_scratch = ConstellationSim(c, st, alg, cfg=cfg, access=aw,
+                                    link_model=LinkBudget()).run()
+    assert via_cache.n_rounds >= 1
+    assert [r.t_end for r in via_cache.rounds] == \
+        pytest.approx([r.t_end for r in from_scratch.rounds], rel=1e-9)
+    assert [r.participants for r in via_cache.rounds] == \
+        [r.participants for r in from_scratch.rounds]
+
+
+def test_deep_fade_download_is_floored():
+    """Regression (review finding): the selector prices downloads via
+    `HardwareModel.tx_time_for(rate_bps=window.rate_bps)`, which must
+    apply the same 1 bps deep-fade floor as the contact-plan transfer
+    math — finite time, no ZeroDivisionError."""
+    from repro.core.timing import HardwareModel
+    hw = HardwareModel()
+    t = hw.tx_time_for(rate_bps=0.0)
+    assert np.isfinite(t) and t == pytest.approx(hw.model_bytes * 8)
+    assert hw.tx_time_for() == hw.tx_time_s          # default stays bitwise
+
+
+def test_rerate_isl_only_keeps_ground_pricing(scene, cached_plan):
+    """Regression (review finding): re-rating one side must not silently
+    flatten the other — `rerate(None, isl_link)` keeps ground windows
+    verbatim, and the engine forwards a lone `isl_link` the same way."""
+    _, _, _, _ = scene
+    budget = cached_plan.rerate(LinkBudget())
+    slow_isl = ConstantRate(1.0)
+    mixed = budget.rerate(None, slow_isl)
+    for k in range(budget.n_sats):
+        assert mixed.ground[k] is budget.ground[k]   # untouched, not re-priced
+    for e in mixed.isl:
+        assert (mixed.isl[e].rates == 1e6).all()
+
+    c, st, aw, _ = scene
+    cfg = SimConfig(max_rounds=1, horizon_s=HORIZON, train=False)
+    sim = ConstellationSim(c, st, ALGORITHMS["fedavg_intracc_isl"],
+                           cfg=cfg, access=aw, contact_plan=budget,
+                           isl_link=slow_isl)
+    assert sim.plan.ground[0] is budget.ground[0]
+    assert all((ew.rates == 1e6).all() for ew in sim.plan.isl.values())
+
+
+def test_engine_cached_plan_without_link_model_untouched(scene, cached_plan):
+    """Back-compat: handing the engine a plan with no link model must use
+    it verbatim (no silent re-pricing)."""
+    c, st, aw, _ = scene
+    cfg = SimConfig(max_rounds=2, horizon_s=HORIZON, train=False)
+    sim = ConstellationSim(c, st, ALGORITHMS["fedavg_intracc_isl"],
+                           cfg=cfg, access=aw, contact_plan=cached_plan)
+    assert sim.plan is cached_plan

@@ -53,8 +53,10 @@ def test_rerate_preserves_geometry_and_reprices():
     assert float(fast.isl[(0, 1)].rates[0]) == 8e6
 
 
-def test_rerate_rejects_geometry_dependent_links():
-    with pytest.raises(ValueError):
+def test_rerate_rejects_geometry_dependent_links_without_cache():
+    """A LinkBudget re-rate needs cached slant ranges; a plan built
+    without geometry (like this toy) must refuse, not mis-price."""
+    with pytest.raises(ValueError, match="cached geometry"):
         _toy_plan(8e6).rerate(LinkBudget())
 
 
@@ -134,3 +136,33 @@ def test_run_scenario_rerates_cached_plan_per_workload():
                    [r.t_end for r in res_fast.rounds]))
     assert [r.t_end for r in res_slow.rounds] != \
         [r.t_end for r in res_fast.rounds]
+
+
+def test_contact_plan_cache_budget_axis():
+    """The benchmark cache's key covers the link model: a `LinkBudget`
+    entry shares the base plan's geometry but carries range-priced
+    rates, and `run_scenario(link_model="budget")` runs end-to-end —
+    including for non-ISL algorithms, which budget pricing forces onto
+    the ContactPlan path so ground uploads are range-priced too."""
+    from benchmarks.common import contact_plan, run_scenario
+    base = contact_plan(1, 10, 1, HORIZON)
+    budget = contact_plan(1, 10, 1, HORIZON, LinkBudget())
+    assert budget is contact_plan(1, 10, 1, HORIZON, LinkBudget())  # cached
+    assert budget is not base
+    for k in range(base.n_sats):
+        np.testing.assert_array_equal(base.ground[k].starts,
+                                      budget.ground[k].starts)
+    assert all(float(r) == C.LINK_MBPS * 1e6
+               for ew in base.ground for r in ew.rates)
+    rates = np.concatenate([ew.rates for ew in budget.ground if len(ew)])
+    assert rates.std() > 0                     # geometry-priced, not flat
+
+    kw = dict(rounds=2, train=False, horizon_s=HORIZON,
+              link_model="budget")
+    res_isl = run_scenario("fedprox_intracc_isl", 1, 10, 1, **kw)
+    res_plain = run_scenario("fedavg", 1, 10, 1, **kw)
+    assert res_isl.n_rounds >= 1 and res_plain.n_rounds >= 1
+
+    with pytest.raises(ValueError, match="link_model"):
+        run_scenario("fedavg", 1, 10, 1, rounds=1, train=False,
+                     horizon_s=HORIZON, link_model="fancy")
