@@ -12,7 +12,13 @@ relay hand-offs are routed over real inter-satellite links by
 with the FSPL/Shannon `LinkBudget` (per-window slant-range geometry, no
 re-propagation) so the sweep quantifies the round-duration cost of
 realistic fading links; rows are tagged `sweep+budget/...`.
-`--horizon-days` shrinks the scenario for smoke/CI runs.
+`--horizon-days` shrinks the scenario for smoke/CI runs; `--smoke`
+collapses the grid to one scenario (CI's per-workload guard).
+`--workload` re-prices every scenario with a registry workload's derived
+cost model — the LM suite (`lm_tiny`, `lm_moe_tiny`, `lm_rwkv6_tiny`,
+`lm_hybrid_tiny`) is where the round-duration vs model-bytes crossover
+lives: the MoE workload's FLOPs are priced on activated parameters only
+while all experts ride the wire.
 """
 from __future__ import annotations
 
@@ -36,13 +42,20 @@ ISL_SUITE = ("fedavg_intracc_isl", "fedprox_intracc_isl")
 def run(rounds: int = 20, quick: bool = False, isl: bool = False,
         horizon_s: float = HORIZON_S, workload: str | None = None,
         train: bool = False, execution: str | None = None,
-        link_model: str | None = None):
+        link_model: str | None = None, smoke: bool = False):
     algs = ALG_SUITE[:4] if quick else ALG_SUITE
     if isl:
         algs = algs + ISL_SUITE
     clusters = (2, 10) if quick else CLUSTERS
     sats = (2, 10) if quick else SATS_PER_CLUSTER
     stations = (1, 13) if quick else STATIONS
+    if smoke:
+        # Single-scenario smoke (CI's per-workload cost-model guard):
+        # one algorithm — plus one ISL variant when --isl is on, so
+        # relay feasibility vs model bytes is pinned too — on the 2x2
+        # constellation, one station.
+        algs = algs[:1] + tuple(a for a in algs if a.endswith("_isl"))[:1]
+        clusters, sats, stations = (2,), (2,), (1,)
     # Non-default workloads re-price every scenario (model bytes / epoch
     # FLOPs from the workload's derived cost model) and tag the row names.
     wtag = f"/{workload}" if workload else ""
@@ -92,6 +105,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="single-scenario smoke: first algorithm on the "
+                         "2x2 constellation, 1 station (per-workload CI "
+                         "cost-model guard)")
     ap.add_argument("--isl", action="store_true",
                     help="add the ISL-enabled *_intracc_isl variants")
     ap.add_argument("--horizon-days", type=float, default=None,
@@ -118,7 +135,7 @@ def main(argv=None):
     emit(run(rounds=args.rounds, quick=args.quick, isl=args.isl,
              horizon_s=horizon_s, workload=args.workload,
              train=args.train, execution=args.execution,
-             link_model=args.link_model))
+             link_model=args.link_model, smoke=args.smoke))
 
 
 if __name__ == "__main__":

@@ -31,6 +31,11 @@ DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "..",
 # baseline and the checking run for rows to be comparable.
 TREND_ROUNDS = 2
 TREND_HORIZON_DAYS = 4.0
+# Registry workloads whose re-priced rows join the trend suite (beyond
+# the default femnist_mlp constants): the LM architecture family, whose
+# activated-param cost models are exactly what the gate must pin.
+TREND_WORKLOADS = ("lm_tiny", "lm_moe_tiny", "lm_rwkv6_tiny",
+                   "lm_hybrid_tiny")
 
 
 def compare(baseline: dict, current: dict, threshold: float = 0.10,
@@ -76,13 +81,21 @@ def generate_trend_suite() -> dict:
     Two pricing passes over the same quick grid: constant-rate rows
     (`sweep/...`) and LinkBudget-priced rows (`sweep+budget/...`, the
     geometry-cached re-rating path), so both comms-pricing modes are
-    gated against the committed baseline."""
+    gated against the committed baseline. A single-scenario smoke per
+    LM workload (`sweep/lm_*/...`) then pins each architecture's
+    activated-param cost model: a drifting FLOP or wire-byte formula
+    moves these round durations and fails the gate."""
     from benchmarks import bench_sweep
     rows = bench_sweep.run(rounds=TREND_ROUNDS, quick=True, isl=True,
                            horizon_s=TREND_HORIZON_DAYS * 86400.0)
     rows += bench_sweep.run(rounds=TREND_ROUNDS, quick=True, isl=True,
                             horizon_s=TREND_HORIZON_DAYS * 86400.0,
                             link_model="budget")
+    for wl in TREND_WORKLOADS:
+        rows += bench_sweep.run(rounds=TREND_ROUNDS, quick=True, isl=True,
+                                smoke=True,
+                                horizon_s=TREND_HORIZON_DAYS * 86400.0,
+                                workload=wl)
     return {"schema": 1, "suites": {"sweep_ci": {
         "rounds": TREND_ROUNDS,
         "horizon_days": TREND_HORIZON_DAYS,

@@ -41,12 +41,25 @@ SATS_PER_CLUSTER = (1, 2, 5, 10)
 STATIONS = (1, 2, 3, 5, 10, 13)
 
 
+def cache_path(prefix: str, clusters: int, sats: int,
+               horizon_s: float) -> str:
+    """Disk-cache filename for one (constellation, horizon) cell.
+
+    The horizon is keyed on the exact float repr, not `int(horizon_s)`:
+    two horizons within the same whole second (0.5 vs 0.9 in short test
+    runs) must not collide on one pickle, or the second caller silently
+    loads the first's windows. `repr(float)` round-trips exactly, so
+    distinct horizons always get distinct files.
+    """
+    return os.path.join(
+        CACHE_DIR, f"{prefix}_{clusters}x{sats}_{float(horizon_s)!r}.pkl")
+
+
 @functools.lru_cache(maxsize=32)
 def access_full(clusters: int, sats: int, horizon_s: float = HORIZON_S):
     """13-station access windows for one constellation, disk-cached."""
     os.makedirs(CACHE_DIR, exist_ok=True)
-    path = os.path.join(CACHE_DIR,
-                        f"aw_{clusters}x{sats}_{int(horizon_s)}.pkl")
+    path = cache_path("aw", clusters, sats, horizon_s)
     if os.path.exists(path):
         with open(path, "rb") as f:
             return pickle.load(f)
@@ -69,8 +82,7 @@ def isl_windows(clusters: int, sats: int, horizon_s: float = HORIZON_S):
     """ISL contact windows for one constellation, disk-cached (they are
     station-independent, so one computation serves all six networks)."""
     os.makedirs(CACHE_DIR, exist_ok=True)
-    path = os.path.join(CACHE_DIR,
-                        f"isl_{clusters}x{sats}_{int(horizon_s)}.pkl")
+    path = cache_path("isl", clusters, sats, horizon_s)
     if os.path.exists(path):
         with open(path, "rb") as f:
             return pickle.load(f)

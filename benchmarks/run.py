@@ -27,25 +27,28 @@ from benchmarks import (
 )
 from benchmarks.common import emit
 
-# Every suite takes (full, execution, link_model); suites that never run
-# gradients ignore the execution axis (it only changes how gradients
-# run), and only the Table-1 sweep carries the link-model axis (it owns
-# the comms-pricing claims). The sweep is timing-only by default, so
-# requesting an execution mode switches it to real training (otherwise
-# the rows would be mislabelled host numbers).
+# Every suite takes (full, execution, link_model, workload); suites that
+# never run gradients ignore the execution axis (it only changes how
+# gradients run), only the Table-1 sweep carries the link-model axis (it
+# owns the comms-pricing claims), and the workload axis re-prices the
+# sweep/accuracy suites for a registry workload (e.g. the LM suite:
+# lm_tiny / lm_moe_tiny / lm_rwkv6_tiny / lm_hybrid_tiny). The sweep is
+# timing-only by default, so requesting an execution mode switches it to
+# real training (otherwise the rows would be mislabelled host numbers).
 SUITES = {
-    "kernels": lambda full, ex, lm: bench_kernels.run(),
-    "round_duration": lambda full, ex, lm: bench_round_duration.run(
+    "kernels": lambda full, ex, lm, wl: bench_kernels.run(),
+    "round_duration": lambda full, ex, lm, wl: bench_round_duration.run(
         quick=not full),
-    "idle": lambda full, ex, lm: bench_idle.run(quick=not full),
-    "speedup": lambda full, ex, lm: bench_speedup.run(
+    "idle": lambda full, ex, lm, wl: bench_idle.run(quick=not full),
+    "speedup": lambda full, ex, lm, wl: bench_speedup.run(
         train=True, rounds=150 if full else 100, execution=ex),
-    "accuracy": lambda full, ex, lm: bench_accuracy.run(
-        quick=not full, rounds=150 if full else 100, execution=ex),
-    "sweep768": lambda full, ex, lm: bench_sweep.run(
+    "accuracy": lambda full, ex, lm, wl: bench_accuracy.run(
+        quick=not full, rounds=150 if full else 100, execution=ex,
+        workload=wl),
+    "sweep768": lambda full, ex, lm, wl: bench_sweep.run(
         quick=not full, train=ex is not None, execution=ex,
-        link_model=lm),
-    "roofline": lambda full, ex, lm: bench_roofline.run(),
+        link_model=lm, workload=wl),
+    "roofline": lambda full, ex, lm, wl: bench_roofline.run(),
 }
 
 DEFAULT_JSON = os.path.join(os.path.dirname(__file__), "..",
@@ -65,12 +68,18 @@ def main(argv=None) -> None:
                     help="comms pricing for the Table-1 sweep (budget = "
                          "slant-range LinkBudget re-rated from cached "
                          "plan geometry)")
+    from repro.core import workload_names
+    ap.add_argument("--workload", default=None, choices=workload_names(),
+                    help="re-price the sweep/accuracy suites for a "
+                         "registry workload (default: the seed's "
+                         "femnist_mlp constants)")
     args = ap.parse_args(argv)
 
     artifact: dict = {"schema": 1, "generated_unix": round(time.time(), 1),
                       "full": bool(args.full), "only": args.only,
                       "execution": args.execution,
                       "link_model": args.link_model,
+                      "workload": args.workload,
                       "suites": {}}
     names = [args.only] if args.only else list(SUITES)
     t_total = time.time()
@@ -78,7 +87,8 @@ def main(argv=None) -> None:
         print(f"# ==== {name} ====")
         t0 = time.time()
         try:
-            rows = SUITES[name](args.full, args.execution, args.link_model)
+            rows = SUITES[name](args.full, args.execution, args.link_model,
+                                args.workload)
             emit(rows)
             wall = time.time() - t0
             print(f"# {name}: {len(rows)} rows in {wall:.1f}s")

@@ -31,8 +31,10 @@ from repro.core.spaceify import (
 from repro.core.workload import (
     Workload,
     get_workload,
+    lm_inactive_params,
     lm_workload,
     register_workload,
+    validate_execution,
     workload_names,
 )
 
@@ -52,7 +54,9 @@ __all__ = [
     "TABLE1_ALGORITHMS",
     "Workload",
     "get_workload",
+    "lm_inactive_params",
     "lm_workload",
     "register_workload",
+    "validate_execution",
     "workload_names",
 ]

@@ -20,6 +20,16 @@ loops) is task-agnostic; everything task-specific is bundled here. A
     round durations and `RoundRecord.comms_bytes` scale with the actual
     model being federated.
 
+The cost model distinguishes *total* from *activated* parameters: wire
+bytes are paid on every parameter in the tree (`n_params` — a satellite
+uploads all experts), but per-token FLOPs only on the parameters a token
+actually multiplies (`active_params`). For dense nets the two coincide;
+for a sparse MoE only `top_k` of `n_experts` routed experts fire per
+token, and an untied embedding table is a gather (one row per token),
+not a matmul. `lm_inactive_params` is the per-architecture formula —
+it walks `ModelConfig.resolved_segments`, so mixed dense/MoE stacks
+(DeepSeek-style) price each segment by its kind.
+
 `WORKLOADS` registers the built-in scenarios:
 
   * `femnist_mlp` — the paper's sweep model. Its cost numbers are pinned
@@ -31,6 +41,11 @@ loops) is task-agnostic; everything task-specific is bundled here. A
     federated token shards (`repro.data.tokens.federated_token_shards`),
     the on-ramp for pricing the assigned LM architectures as
     constellation clients (`lm_workload` builds one for any ModelConfig).
+  * `lm_moe_tiny` / `lm_rwkv6_tiny` / `lm_hybrid_tiny` — reduced variants
+    of the assigned architecture families (DeepSeek-V3 MoE+MLA, RWKV6,
+    Hymba-style hybrid) as sweepable constellation workloads. The MoE
+    entry is the round-duration vs model-bytes crossover axis: all
+    experts ride the wire, only `top_k` of them train per token.
 """
 from __future__ import annotations
 
@@ -46,6 +61,19 @@ from repro.core.client import classification_loss, evaluate
 from repro.data.femnist import IMG, synth_femnist
 from repro.data.tokens import federated_token_shards
 from repro.orbits import constants as C
+
+
+EXECUTION_MODES = ("host", "mesh")
+
+
+def validate_execution(execution: str) -> str:
+    """The one validator for execution modes — `Workload.with_execution`
+    and `ConstellationSim` both route here, so the accepted set and the
+    error message cannot drift apart."""
+    if execution not in EXECUTION_MODES:
+        raise ValueError(f"unknown execution mode {execution!r}; "
+                         f"expected one of {EXECUTION_MODES}")
+    return execution
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,10 +103,16 @@ class Workload:
     # --- cost model -----------------------------------------------------
     # FLOPs for one training sample (fwd+bwd). Either an explicit number
     # computed from the architecture dims, or a per-parameter multiplier
-    # applied to the parameter-tree size (6 for dense nets: 2 FLOP/MAC
-    # forward x3 for backward; 6*tokens for transformers).
+    # applied to the *activated* parameter count (6 for dense nets:
+    # 2 FLOP/MAC forward x3 for backward; 6*tokens for transformers).
     flops_per_sample: float | None = None
     train_flops_per_param: float | None = None
+    # Parameters in the tree that a token never multiplies: routed MoE
+    # experts beyond top_k, an untied embedding table (gather, not
+    # matmul). They cost wire bytes (`model_bytes`) but no FLOPs —
+    # `active_params = n_params - inactive_params` is what
+    # `train_flops_per_param` prices. 0 for dense nets.
+    inactive_params: int = 0
     samples_per_epoch: int = 275         # nominal local-epoch size
     bytes_per_param: int = 4             # f32 on the wire
     # Calibration overrides (paper constants). When set they win over the
@@ -97,10 +131,8 @@ class Workload:
     # ------------------------------------------------------------------ #
     def with_execution(self, execution: str) -> "Workload":
         """This workload, dispatched to `execution` ("host" | "mesh")."""
-        if execution not in ("host", "mesh"):
-            raise ValueError(f"unknown execution mode {execution!r}; "
-                             "expected 'host' or 'mesh'")
-        return dataclasses.replace(self, execution=execution)
+        return dataclasses.replace(
+            self, execution=validate_execution(execution))
 
     @functools.cached_property
     def n_params(self) -> int:
@@ -109,8 +141,22 @@ class Workload:
         return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
 
     @property
+    def active_params(self) -> int:
+        """Parameters a training token actually multiplies — what FLOPs
+        are priced on. Equals `n_params` for dense nets; strictly less
+        for sparse MoEs (idle experts) and untied embedding gathers."""
+        active = self.n_params - self.inactive_params
+        if not 0 < active <= self.n_params:
+            raise ValueError(
+                f"workload {self.name!r}: inactive_params="
+                f"{self.inactive_params} leaves no activated parameters "
+                f"(n_params={self.n_params})")
+        return active
+
+    @property
     def model_bytes(self) -> int:
-        """Bytes on the wire for one model transfer."""
+        """Bytes on the wire for one model transfer — *total* parameters:
+        a satellite uploads every expert, activated or not."""
         if self.model_bytes_override is not None:
             return int(self.model_bytes_override)
         return self.n_params * self.bytes_per_param
@@ -126,7 +172,7 @@ class Workload:
                 raise ValueError(
                     f"workload {self.name!r} has no cost model: set "
                     "flops_per_sample, train_flops_per_param, or overrides")
-            fps = self.train_flops_per_param * self.n_params
+            fps = self.train_flops_per_param * self.active_params
         return fps * self.samples_per_epoch / 1e6
 
 
@@ -203,14 +249,52 @@ def make_lm_evaluate(cfg) -> Callable:
     return lm_evaluate
 
 
+def lm_inactive_params(cfg) -> int:
+    """Parameters of a `repro.models.lm` ModelConfig that sit in the tree
+    (and on the wire) but that a training token never multiplies.
+
+    The per-architecture formula walks `cfg.resolved_segments`:
+
+      * "attn" / "rwkv" / "hybrid" layers are fully dense — attention,
+        time-mix, SSM heads, and MLPs all touch every weight per token;
+      * "moe" layers fire only `top_k` of `n_experts` routed experts per
+        token (router and shared experts stay dense), so the other
+        `n_experts - top_k` expert MLPs are idle FLOP-wise;
+      * an untied embedding table is a per-token row *gather*, not a
+        matmul (the output head — tied or not — is a real matmul and
+        stays active, as does a DeepSeek-style MTP head).
+
+    Mixed stacks (DeepSeek-V3's dense-then-MoE) price each segment by its
+    kind. The estimate deliberately ignores capacity-factor token drops —
+    6 FLOP/active-param/token is the standard planning number.
+    """
+    inactive = 0
+    if not cfg.tie_embeddings:
+        inactive += cfg.vocab_size * cfg.d_model
+    if cfg.moe is not None:
+        # One routed expert = w1/w2 (+ w3 when the MLP is gated), each
+        # (d_model x d_ff_expert) — mirrors models.lm.moe.init_moe.
+        mats = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+        per_expert = mats * cfg.d_model * cfg.moe.d_ff_expert
+        idle = cfg.moe.n_experts - min(cfg.moe.top_k, cfg.moe.n_experts)
+        moe_layers = sum(s.n_layers for s in cfg.resolved_segments
+                         if s.kind == "moe")
+        inactive += moe_layers * idle * per_expert
+    return inactive
+
+
 def lm_workload(cfg, *, name: str | None = None, seq_len: int = 32,
                 samples_per_client: int = 32, eval_samples: int = 8
                 ) -> Workload:
     """Federate any `repro.models.lm` ModelConfig over token shards.
 
     The cost model is the standard transformer estimate: 6 FLOP per
-    parameter per token (fwd+bwd), (seq_len + 1) tokens per sample row,
-    parameter count taken from the real parameter tree.
+    *activated* parameter per token (fwd+bwd), (seq_len + 1) tokens per
+    sample row. Total parameter count comes from the real parameter tree
+    and prices the wire (`model_bytes` at `cfg.dtype` width); the
+    activated subset (`lm_inactive_params`) prices compute — for a
+    sparse MoE the two diverge, which is exactly the round-duration vs
+    model-bytes crossover the sweep explores.
     """
     from repro.models.lm.transformer import init_params
     from repro.train.step import lm_loss
@@ -234,6 +318,7 @@ def lm_workload(cfg, *, name: str | None = None, seq_len: int = 32,
         mesh_batch_dims={"tokens": 2},
 
         train_flops_per_param=6.0 * (seq_len + 1),
+        inactive_params=lm_inactive_params(cfg),
         samples_per_epoch=samples_per_client,
         bytes_per_param=int(bytes_per_param),
     )
@@ -250,12 +335,45 @@ def _lm_tiny() -> Workload:
                        samples_per_client=32, eval_samples=8)
 
 
+def _lm_moe_tiny() -> Workload:
+    """Reduced DeepSeek-V3: 3 dense MLA layers + 1 MoE layer (1 shared +
+    8 routed experts, top-2) + MTP head. The crossover workload: every
+    expert rides the wire (`model_bytes` counts all 8), but per-token
+    FLOPs only touch 2 — small epoch time against large model bytes."""
+    from repro.configs import get_config
+    cfg = get_config("deepseek-v3-671b").reduced(n_layers=4, n_experts=8)
+    return lm_workload(cfg, name="lm_moe_tiny", seq_len=32,
+                       samples_per_client=32, eval_samples=8)
+
+
+def _lm_rwkv6_tiny() -> Workload:
+    """Reduced RWKV6 (Finch): 2 attention-free time-mix/channel-mix
+    layers. Fully dense per token — only the untied embedding gather
+    separates activated from total parameters."""
+    from repro.configs import get_config
+    return lm_workload(get_config("rwkv6-1.6b").reduced(),
+                       name="lm_rwkv6_tiny", seq_len=32,
+                       samples_per_client=32, eval_samples=8)
+
+
+def _lm_hybrid_tiny() -> Workload:
+    """Reduced Hymba: 2 hybrid layers (parallel sliding-window attention
+    + SSD heads; the first is a full-attention anchor)."""
+    from repro.configs import get_config
+    return lm_workload(get_config("hymba-1.5b").reduced(),
+                       name="lm_hybrid_tiny", seq_len=32,
+                       samples_per_client=32, eval_samples=8)
+
+
 # Registry entries are built lazily (constructing the LM workload touches
 # the model stack) and cached after first use.
 _BUILDERS: dict[str, Callable[[], Workload]] = {
     "femnist_mlp": _femnist_mlp,
     "femnist_cnn": _femnist_cnn,
     "lm_tiny": _lm_tiny,
+    "lm_moe_tiny": _lm_moe_tiny,
+    "lm_rwkv6_tiny": _lm_rwkv6_tiny,
+    "lm_hybrid_tiny": _lm_hybrid_tiny,
 }
 _CACHE: dict[str, Workload] = {}
 

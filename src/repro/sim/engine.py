@@ -50,7 +50,7 @@ from repro.core.aggregation import admission_weights
 from repro.core.client import vmapped_client_update
 from repro.core.spaceify import SpaceifiedAlgorithm
 from repro.core.timing import HardwareModel
-from repro.core.workload import Workload, get_workload
+from repro.core.workload import Workload, get_workload, validate_execution
 from repro.data.federated import FederatedDataset
 from repro.models.femnist_mlp import femnist_mlp_apply, femnist_mlp_init
 from repro.orbits import constants as C
@@ -172,12 +172,26 @@ class ConstellationSim:
             self.plan = build_contact_plan(
                 self.aw, iw, ground, isl_link or ground,
                 constellation=constellation, stations=stations)
-        # Execution mode: per-run override > workload capability.
-        self.execution = execution or self.workload.execution
-        if self.execution not in ("host", "mesh"):
-            raise ValueError(f"unknown execution mode {self.execution!r}; "
-                             "expected 'host' or 'mesh'")
+        # Execution mode: per-run override > workload capability. One
+        # validator (shared with Workload.with_execution) owns the
+        # accepted set, so the two entry points cannot drift.
+        self.execution = validate_execution(
+            execution or self.workload.execution)
         if self.execution == "mesh":
+            # The mesh round step stacks one (x, y) sample stream per pod
+            # slot. A workload whose launch-style dict-batch schema
+            # declares extra streams (prefix/encoder embeddings) cannot
+            # be expressed that way — refuse instead of silently
+            # dropping the extra keys.
+            dims = self.workload.mesh_batch_dims
+            streams = [k for k in (dims or {}) if k != "labels"]
+            if len(streams) > 1:
+                raise ValueError(
+                    f"workload {self.workload.name!r} declares a "
+                    f"multi-stream mesh batch schema {sorted(dims)}; the "
+                    "engine's mesh path carries a single (x, y) sample "
+                    "stream per pod slot — run with execution='host' or "
+                    "drive launch.fl_round.make_fl_round_step directly")
             # The collective realizes exactly the weighted-average /
             # discounted-delta family; a custom Strategy.aggregate would
             # be silently bypassed, so refuse instead.

@@ -1,0 +1,193 @@
+"""Architecture-true LM workload suite (MoE / RWKV6 / hybrid).
+
+Pins the activated-parameter cost model: wire bytes are paid on every
+parameter in the tree (`n_params`), per-token FLOPs only on the ones a
+token multiplies (`active_params`) — idle routed experts and untied
+embedding gathers cost bytes but no compute. Hand counts walk
+`ModelConfig.resolved_segments`; parameter totals are checked against
+the *real* parameter tree, not the formula that derived them.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.core import (
+    ALGORITHMS,
+    get_workload,
+    lm_inactive_params,
+    workload_names,
+)
+from repro.core.timing import HardwareModel
+from repro.orbits import WalkerStar, compute_access_windows, station_subnetwork
+from repro.sim import ConstellationSim, SimConfig
+
+HORIZON_S = 6 * 86400.0
+NEW_WORKLOADS = ("lm_moe_tiny", "lm_rwkv6_tiny", "lm_hybrid_tiny")
+
+
+@pytest.fixture(scope="module")
+def scenario():
+    c = WalkerStar(2, 2)
+    st = station_subnetwork(2)
+    aw = compute_access_windows(c, st, horizon_s=HORIZON_S)
+    return c, st, aw
+
+
+def _tree_size(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+# ------------------------------------------------------------- registry --
+def test_lm_suite_registered():
+    assert set(NEW_WORKLOADS) <= set(workload_names())
+
+
+# ----------------------------------------------------- activated params --
+def test_moe_active_vs_total_matches_segment_hand_count():
+    """lm_moe_tiny (reduced DeepSeek-V3: 3 dense MLA layers + 1 MoE
+    layer of 1 shared + 8 routed top-2 experts): the inactive set is
+    exactly the idle routed experts plus the untied embedding gather,
+    hand-counted from `resolved_segments`."""
+    wl = get_workload("lm_moe_tiny")
+    cfg = get_config("deepseek-v3-671b").reduced(n_layers=4, n_experts=8)
+    kinds = [(s.kind, s.n_layers) for s in cfg.resolved_segments]
+    assert kinds == [("attn", 3), ("moe", 1)]          # mixed-stack walk
+    assert cfg.moe.n_experts == 8 and cfg.moe.top_k == 2
+
+    # Hand count: swiglu experts carry 3 (d_model x d_ff_expert) mats;
+    # 6 of 8 routed experts idle per token; embeddings are untied.
+    idle_experts = 1 * (8 - 2) * 3 * cfg.d_model * cfg.moe.d_ff_expert
+    embed_gather = cfg.vocab_size * cfg.d_model
+    assert wl.inactive_params == lm_inactive_params(cfg) \
+        == idle_experts + embed_gather
+    assert wl.active_params == wl.n_params - idle_experts - embed_gather
+
+    # The acceptance crossover: FLOPs priced on activated params only
+    # (strictly below the dense-equivalent formula on n_params) while
+    # model_bytes counts every expert at f32 width.
+    dense_equiv = (wl.train_flops_per_param * wl.n_params
+                   * wl.samples_per_epoch / 1e6)
+    assert wl.epoch_mflops == pytest.approx(
+        wl.train_flops_per_param * wl.active_params
+        * wl.samples_per_epoch / 1e6)
+    assert wl.epoch_mflops < dense_equiv
+    assert wl.model_bytes == 4 * wl.n_params
+
+    # n_params itself is honest: it equals the real parameter tree.
+    assert wl.n_params == _tree_size(wl.init_fn(jax.random.PRNGKey(0)))
+
+
+@pytest.mark.parametrize("name,arch", [("lm_rwkv6_tiny", "rwkv6-1.6b"),
+                                       ("lm_hybrid_tiny", "hymba-1.5b")])
+def test_dense_family_params_match_real_tree(name, arch):
+    """RWKV6/hybrid trees are fully dense per token: the only inactive
+    parameters are the untied embedding gather, and `n_params` matches
+    `jax.eval_shape` of the real tree (checked against a real init)."""
+    wl = get_workload(name)
+    cfg = get_config(arch).reduced()
+    params = wl.init_fn(jax.random.PRNGKey(0))
+    shapes = jax.eval_shape(wl.init_fn, jax.random.PRNGKey(0))
+    n = _tree_size(params)
+    assert wl.n_params == n == sum(
+        int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    assert wl.inactive_params == cfg.vocab_size * cfg.d_model
+    assert wl.active_params == n - cfg.vocab_size * cfg.d_model
+    assert wl.model_bytes == 4 * n                     # f32 reduced config
+    # Heavier than lm_tiny on both axes -> a different sweep point.
+    tiny = get_workload("lm_tiny")
+    assert wl.model_bytes > tiny.model_bytes
+    assert wl.epoch_mflops > tiny.epoch_mflops
+    hw = HardwareModel.for_workload(wl)
+    assert hw.model_bytes == wl.model_bytes
+    assert hw.epoch_time_s > HardwareModel().epoch_time_s
+
+
+def test_moe_cheaper_flops_despite_more_bytes_than_dense_twin():
+    """The crossover axis in one assertion: against a hypothetical dense
+    model of the same total size (6 FLOP/param/token on n_params), the
+    MoE workload moves the same bytes but trains strictly fewer FLOPs —
+    heavy on the wire, light on the clock."""
+    wl = get_workload("lm_moe_tiny")
+    twin = dataclasses.replace(wl, name="dense_twin", inactive_params=0)
+    assert twin.model_bytes == wl.model_bytes
+    assert wl.epoch_mflops < twin.epoch_mflops
+    hw_moe = HardwareModel.for_workload(wl)
+    hw_twin = HardwareModel.for_workload(twin)
+    assert hw_moe.tx_time_s == hw_twin.tx_time_s
+    assert hw_moe.epoch_time_s < hw_twin.epoch_time_s
+
+
+# ------------------------------------------------- engine smoke + parity --
+def _max_param_diff(tree_a, tree_b) -> float:
+    return max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+               for a, b in zip(jax.tree.leaves(tree_a),
+                               jax.tree.leaves(tree_b)))
+
+
+def test_lm_moe_tiny_engine_smoke_and_mesh_parity(scenario):
+    """2-round end-to-end training for the MoE workload, host and mesh:
+    derived comms bytes on every round, finite token accuracy, and the
+    collective path within 1e-5 of the host path on per-round params."""
+    c, st, aw = scenario
+    wl = get_workload("lm_moe_tiny")
+    hw = HardwareModel.for_workload(wl)
+    cfg = SimConfig(max_rounds=2, horizon_s=HORIZON_S, train=True,
+                    eval_every=1, batch_size=8, max_steps=4,
+                    record_params=True)
+    runs = {}
+    for mode in ("host", "mesh"):
+        runs[mode] = ConstellationSim(
+            c, st, ALGORITHMS["fedavg"], workload=wl, hw=hw, cfg=cfg,
+            access=aw, execution=mode).run()
+    host, mesh = runs["host"], runs["mesh"]
+    assert host.n_rounds == mesh.n_rounds >= 2
+    expect = 2.0 * wl.model_bytes                      # down + up, all experts
+    for rec in host.rounds:
+        assert all(b == expect for b in rec.comms_bytes)
+    assert all(np.isfinite(a) for _, _, a in host.accuracy_curve)
+    for i, (hp, mp) in enumerate(zip(host.params_history,
+                                     mesh.params_history)):
+        assert _max_param_diff(hp, mp) < 1e-5, i
+    for (_, _, ai), (_, _, aj) in zip(host.accuracy_curve,
+                                      mesh.accuracy_curve):
+        assert abs(ai - aj) < 1e-5
+
+
+def test_mesh_refuses_multi_stream_batch_schema(scenario):
+    """A workload whose launch-style dict-batch schema declares extra
+    sample streams (VLM prefix / encoder embeddings) cannot ride the
+    engine's stacked (x, y) mesh contract — the engine must refuse with
+    a clear error instead of silently dropping the extra streams."""
+    c, st, aw = scenario
+    wl = dataclasses.replace(
+        get_workload("lm_tiny"), name="lm_vlm_like",
+        mesh_batch_dims={"tokens": 2, "prefix_embeds": 3})
+    cfg = SimConfig(max_rounds=1, horizon_s=HORIZON_S, train=False)
+    with pytest.raises(ValueError, match="multi-stream"):
+        ConstellationSim(c, st, ALGORITHMS["fedavg"], cfg=cfg, access=aw,
+                         workload=wl, execution="mesh")
+    # The same workload is fine on host (the dict schema is unused) ...
+    ConstellationSim(c, st, ALGORITHMS["fedavg"], cfg=cfg, access=aw,
+                     workload=wl, execution="host")
+    # ... and a labels key does not count as a second stream.
+    ok = dataclasses.replace(get_workload("femnist_mlp"),
+                             mesh_batch_dims={"x": 4, "labels": 1})
+    ConstellationSim(c, st, ALGORITHMS["fedavg"], cfg=cfg, access=aw,
+                     workload=ok, execution="mesh")
+
+
+def test_execution_validation_is_shared(scenario):
+    """One validator owns the accepted execution set: the engine and
+    Workload.with_execution raise the same error for the same input."""
+    c, st, aw = scenario
+    cfg = SimConfig(max_rounds=1, horizon_s=HORIZON_S, train=False)
+    with pytest.raises(ValueError) as e_wl:
+        get_workload("lm_tiny").with_execution("warp")
+    with pytest.raises(ValueError) as e_sim:
+        ConstellationSim(c, st, ALGORITHMS["fedavg"], cfg=cfg, access=aw,
+                         workload="lm_tiny", execution="warp")
+    assert str(e_wl.value) == str(e_sim.value)

@@ -84,6 +84,32 @@ def test_big_model_makes_isl_window_too_short():
     assert plan.next_isl_transfer(0, 1, 0.0, 20e6) is not None
 
 
+# --------------------------------------------------- disk-cache filenames --
+def test_access_cache_keys_exact_horizon(tmp_path, monkeypatch):
+    """Regression: disk-cache filenames used to key on `int(horizon_s)`,
+    so any two horizons within the same whole second (0.5 vs 0.9 in
+    short test runs) collided on one pickle and the second caller
+    silently loaded the first's windows. Keys are now the exact float
+    repr — distinct horizons, distinct files."""
+    import benchmarks.common as bc
+
+    # Sub-second horizons must not share a filename (both were `_0`).
+    assert bc.cache_path("aw", 2, 2, 0.5) != bc.cache_path("aw", 2, 2, 0.9)
+    # Int-valued horizons normalize: 259200 and 259200.0 share one file.
+    assert bc.cache_path("isl", 2, 2, 259200) == \
+        bc.cache_path("isl", 2, 2, 259200.0)
+
+    monkeypatch.setattr(bc, "CACHE_DIR", str(tmp_path))
+    bc.access_full.cache_clear()     # in-memory lru would mask the disk key
+    try:
+        bc.access_full(1, 2, 0.5)
+        bc.access_full(1, 2, 0.9)
+        files = sorted(p.name for p in tmp_path.iterdir())
+        assert len(files) == 2, files    # the old scheme wrote one file
+    finally:
+        bc.access_full.cache_clear()     # drop entries born in tmp_path
+
+
 # ------------------------------------------- run_scenario cache re-rating --
 def _slowlink_builder():
     from repro.models.femnist_mlp import femnist_mlp_apply, femnist_mlp_init

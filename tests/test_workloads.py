@@ -27,7 +27,8 @@ def scenario():
 
 # ------------------------------------------------------------- registry --
 def test_registry_contents():
-    assert {"femnist_mlp", "femnist_cnn", "lm_tiny"} <= set(workload_names())
+    assert {"femnist_mlp", "femnist_cnn", "lm_tiny", "lm_moe_tiny",
+            "lm_rwkv6_tiny", "lm_hybrid_tiny"} <= set(workload_names())
 
 
 def test_get_workload_identity_and_errors():
@@ -62,6 +63,22 @@ def test_derived_cost_from_parameter_tree():
     hw = HardwareModel.for_workload(lm)
     assert hw.model_bytes == 4 * n
     assert hw.epoch_time_s > HardwareModel().epoch_time_s  # heavier model
+
+
+def test_lm_tiny_dense_numbers_pinned():
+    """Regression pin for the activated-param cost-model split: a dense
+    net with tied embeddings activates every parameter, so lm_tiny's
+    numbers are *exactly* what the pre-split formula produced —
+    6 FLOP/param x (seq_len + 1) tokens on the full n_params."""
+    lm = get_workload("lm_tiny")
+    assert lm.inactive_params == 0
+    assert lm.active_params == lm.n_params
+    assert lm.epoch_mflops == 6.0 * 33 * lm.n_params * 32 / 1e6
+    assert lm.model_bytes == 4 * lm.n_params
+    # femnist workloads are dense too: the split changes nothing.
+    for name in ("femnist_mlp", "femnist_cnn"):
+        wl = get_workload(name)
+        assert wl.active_params == wl.n_params
 
 
 def test_conv_tree_cost_model_edges():
@@ -109,8 +126,18 @@ def test_moe_tree_cost_model():
         if any(str(getattr(e, "key", "")) == "moe" for e in path)
         and str(path[-1].key) in ("w1", "w2", "w3"))
     assert expert_elems > 0.5 * n
+    # ... but FLOPs are priced on *activated* parameters: the reduced
+    # grok routes top-2 of 4 experts (gelu MLP -> w1/w2 only) and its
+    # embeddings are untied (per-token gather, no matmul).
+    from repro.core import lm_inactive_params
+    idle = sum(s.n_layers for s in cfg.resolved_segments
+               if s.kind == "moe") * (4 - 2) * 2 * cfg.d_model * \
+        cfg.moe.d_ff_expert
+    assert wl.inactive_params == lm_inactive_params(cfg) == \
+        idle + cfg.vocab_size * cfg.d_model
     assert wl.epoch_mflops == pytest.approx(
-        6.0 * 17 * n * 8 / 1e6)                   # 6 FLOP/param/token
+        6.0 * 17 * wl.active_params * 8 / 1e6)    # 6 FLOP/active-param/token
+    assert wl.epoch_mflops < 6.0 * 17 * n * 8 / 1e6  # dense formula overprices
 
 
 def test_cost_model_required():
