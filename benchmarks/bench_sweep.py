@@ -14,6 +14,11 @@ re-propagation) so the sweep quantifies the round-duration cost of
 realistic fading links; rows are tagged `sweep+budget/...`.
 `--horizon-days` shrinks the scenario for smoke/CI runs; `--smoke`
 collapses the grid to one scenario (CI's per-workload guard).
+`--trace OUT.json` enables the `repro.obs` tracer for the run and writes
+a Chrome/Perfetto-compatible trace (open at https://ui.perfetto.dev)
+with nested plan-build/round/eval spans and cache-hit counters; add
+`--trace-jsonl OUT.jsonl` for the flat event log. Tracing only observes
+wall clocks — the emitted rows are bitwise identical either way.
 `--workload` re-prices every scenario with a registry workload's derived
 cost model — the LM suite (`lm_tiny`, `lm_moe_tiny`, `lm_rwkv6_tiny`,
 `lm_hybrid_tiny`) is where the round-duration vs model-bytes crossover
@@ -23,8 +28,14 @@ while all experts ride the wire.
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 
-from benchmarks.common import (
+if __package__ in (None, ""):       # `python benchmarks/bench_sweep.py ...`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import (     # noqa: E402
     CLUSTERS,
     HORIZON_S,
     SATS_PER_CLUSTER,
@@ -126,16 +137,39 @@ def main(argv=None):
                     help="comms pricing: constant 580 Mbps telemetry "
                          "(default) or the slant-range LinkBudget, "
                          "re-rated from the cached plan geometry")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="enable repro.obs tracing and write a Chrome/"
+                         "Perfetto trace.json of the run")
+    ap.add_argument("--trace-jsonl", default=None, metavar="OUT.jsonl",
+                    help="also write the flat JSONL event log "
+                         "(requires --trace)")
     args = ap.parse_args(argv)
     if args.execution and not args.train:
         ap.error("--execution changes how gradients run; pair it with "
                  "--train (a timing-only sweep would mislabel its rows)")
+    if args.trace_jsonl and not args.trace:
+        ap.error("--trace-jsonl requires --trace (one tracer, two views)")
     horizon_s = (args.horizon_days * 86400.0 if args.horizon_days
                  else HORIZON_S)
+    if args.trace:
+        from repro import obs
+        obs.enable()
     emit(run(rounds=args.rounds, quick=args.quick, isl=args.isl,
              horizon_s=horizon_s, workload=args.workload,
              train=args.train, execution=args.execution,
              link_model=args.link_model, smoke=args.smoke))
+    if args.trace:
+        summary = obs.metrics_summary()
+        obs.write_chrome_trace(args.trace)
+        if args.trace_jsonl:
+            obs.write_jsonl(args.trace_jsonl)
+        # Comment-prefixed so the CSV rows above stay machine-parseable.
+        for name, value in sorted(summary["counters"].items()):
+            print(f"# obs counter {name}={value}")
+        for name, rate in sorted(summary["rates"].items()):
+            print(f"# obs rate {name}={rate}")
+        print(f"# obs wrote trace to {args.trace}"
+              + (f" and {args.trace_jsonl}" if args.trace_jsonl else ""))
 
 
 if __name__ == "__main__":

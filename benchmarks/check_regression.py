@@ -15,6 +15,11 @@ comms pricing, or event-loop edits), not noise.
 `--write-baseline` merges the trend suite into BENCH_sweep.json without
 clobbering suites written by `benchmarks.run` (whose sweep768 /
 round_duration rows are also compared when both sides carry them).
+
+The trend suite also records `wall_s` and a per-phase `wall_breakdown`
+(from `repro.obs` tracing). These are *informational only* — wall clocks
+are machine-dependent, so the gate prints their trend vs the committed
+baseline but never fails on them; only the simulated duration rows gate.
 """
 from __future__ import annotations
 
@@ -22,6 +27,7 @@ import argparse
 import json
 import os
 import sys
+import time
 
 # Suites whose row values are durations (hours): higher is a regression.
 DURATION_SUITES = ("sweep_ci", "sweep768", "round_duration")
@@ -86,6 +92,19 @@ def generate_trend_suite() -> dict:
     activated-param cost model: a drifting FLOP or wire-byte formula
     moves these round durations and fails the gate."""
     from benchmarks import bench_sweep
+
+    from repro import obs
+
+    # Trace the trend run so the baseline carries a per-phase wall
+    # breakdown (informational — see module docstring). Tracing only
+    # observes walls; the duration rows are simulation-time values and
+    # stay bitwise identical (tests/test_obs.py pins this).
+    fresh = not obs.enabled()
+    if fresh:
+        obs.enable()
+    spans0 = {k: v["total_s"]
+              for k, v in obs.metrics_summary().get("spans", {}).items()}
+    t0 = time.perf_counter()
     rows = bench_sweep.run(rounds=TREND_ROUNDS, quick=True, isl=True,
                            horizon_s=TREND_HORIZON_DAYS * 86400.0)
     rows += bench_sweep.run(rounds=TREND_ROUNDS, quick=True, isl=True,
@@ -96,11 +115,45 @@ def generate_trend_suite() -> dict:
                                 smoke=True,
                                 horizon_s=TREND_HORIZON_DAYS * 86400.0,
                                 workload=wl)
+    wall_s = time.perf_counter() - t0
+    breakdown = {}
+    for name, s in obs.metrics_summary().get("spans", {}).items():
+        d = s["total_s"] - spans0.get(name, 0.0)
+        if d >= 0.005:
+            breakdown[name] = round(d, 3)
+    if fresh:
+        obs.disable()
     return {"schema": 1, "suites": {"sweep_ci": {
         "rounds": TREND_ROUNDS,
         "horizon_days": TREND_HORIZON_DAYS,
+        "wall_s": round(wall_s, 2),
+        "wall_breakdown": dict(sorted(breakdown.items(),
+                                      key=lambda kv: -kv[1])),
         "rows": [list(r) for r in rows],
     }}}
+
+
+def wall_trend(baseline: dict, current: dict) -> list[str]:
+    """Informational wall-clock trend lines (never gate CI: wall seconds
+    are machine-dependent, unlike the simulated duration rows)."""
+    b = baseline.get("suites", {}).get("sweep_ci") or {}
+    c = current.get("suites", {}).get("sweep_ci") or {}
+    lines = []
+    bw, cw = b.get("wall_s"), c.get("wall_s")
+    if isinstance(bw, (int, float)) and isinstance(cw, (int, float)) \
+            and bw > 0:
+        lines.append(f"sweep_ci/wall_s: {bw} -> {cw} s "
+                     f"({(cw / bw - 1.0) * 100.0:+.1f}%)")
+    bb = b.get("wall_breakdown") or {}
+    for name, cur in sorted((c.get("wall_breakdown") or {}).items(),
+                            key=lambda kv: -kv[1]):
+        base = bb.get(name)
+        if isinstance(base, (int, float)) and base > 0:
+            lines.append(f"sweep_ci/wall/{name}: {base} -> {cur} s "
+                         f"({(cur / base - 1.0) * 100.0:+.1f}%)")
+        else:
+            lines.append(f"sweep_ci/wall/{name}: (new) -> {cur} s")
+    return lines
 
 
 def main(argv=None) -> int:
@@ -139,6 +192,12 @@ def main(argv=None) -> int:
         print("# baseline shares no duration rows with this run; skipping")
         return 0
     regressions = compare(baseline, current, threshold=args.threshold)
+    # Wall-clock trend is informational only — printed, never gated.
+    trend = wall_trend(baseline, current)
+    if trend:
+        print("# wall-clock trend (informational, machine-dependent):")
+        for line in trend:
+            print(f"#   {line}")
     if regressions:
         print(f"# ROUND-DURATION REGRESSIONS (> {args.threshold:.0%} "
               f"vs committed baseline):")

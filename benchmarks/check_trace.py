@@ -1,0 +1,129 @@
+"""Validate a `repro.obs` Chrome/Perfetto trace artifact (CI gate).
+
+  python benchmarks/check_trace.py /tmp/trace.json
+  python benchmarks/check_trace.py trace.json --require sim.round,sim.eval
+
+Checks that the traced smoke run actually produced a well-formed,
+usefully-populated trace:
+
+  * top-level shape: ``traceEvents`` list + ``metadata.summary``;
+  * every event carries the Chrome-trace required keys for its phase
+    (``ph`` in {X, C, M}), with non-negative numeric ``ts``/``dur``
+    (microseconds; fractional values are fine);
+  * "X" spans nest properly per thread — a span's [ts, ts+dur] interval
+    never partially overlaps another on the same tid (pure containment,
+    as produced by a push/pop tracer);
+  * the required span names are present (default: the acceptance chain
+    ``bench.plan_build`` -> ``sim.round`` -> ``sim.eval``);
+  * at least one cache counter ("C" event or summary counter ending in
+    ``.hit``/``.miss``) was recorded.
+
+Exit code 0 on success, 1 with a ``# trace FAIL ...`` report otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+REQUIRED_SPANS = "bench.plan_build,sim.round,sim.eval"
+# "M" metadata events carry no timestamp in the Chrome format.
+_COMMON_KEYS = ("name", "ph", "pid", "tid")
+
+
+def validate(doc: dict, required_spans: list[str]) -> list[str]:
+    """Return a list of problems (empty = valid trace)."""
+    problems: list[str] = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return ["traceEvents missing or empty"]
+    if not isinstance(doc.get("metadata", {}).get("summary"), dict):
+        problems.append("metadata.summary missing")
+
+    seen_spans: set[str] = set()
+    counter_names: set[str] = set()
+    by_tid: dict = {}
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph not in ("X", "C", "M"):
+            problems.append(f"event {i}: unknown ph {ph!r}")
+            continue
+        missing = [k for k in _COMMON_KEYS if k not in ev]
+        if missing:
+            problems.append(f"event {i} ({ph}): missing keys {missing}")
+            continue
+        if ph == "M":
+            continue
+        if not isinstance(ev.get("ts"), (int, float)) or ev["ts"] < 0:
+            problems.append(f"event {i}: ts must be a non-negative number")
+            continue
+        if ph == "C":
+            counter_names.add(ev["name"])
+            continue
+        dur = ev.get("dur")
+        if not isinstance(dur, (int, float)) or dur < 0:
+            problems.append(f"event {i}: X event needs numeric dur >= 0")
+            continue
+        seen_spans.add(ev["name"])
+        by_tid.setdefault(ev["tid"], []).append(
+            (ev["ts"], ev["ts"] + dur, ev["name"]))
+
+    # Nesting: on one thread, any two spans either nest or are disjoint.
+    # Sort by (start, -end) so a parent precedes its children; a stack
+    # then catches any partial overlap.
+    for tid, spans in by_tid.items():
+        spans.sort(key=lambda s: (s[0], -s[1]))
+        stack: list[tuple[int, int, str]] = []
+        for s, e, name in spans:
+            while stack and s >= stack[-1][1]:
+                stack.pop()
+            if stack and e > stack[-1][1]:
+                problems.append(
+                    f"tid {tid}: span {name!r} [{s}, {e}] partially "
+                    f"overlaps {stack[-1][2]!r} [{stack[-1][0]}, "
+                    f"{stack[-1][1]}] — not a proper nesting")
+                break
+            stack.append((s, e, name))
+
+    for name in required_spans:
+        if name and name not in seen_spans:
+            problems.append(f"required span {name!r} never recorded "
+                            f"(saw: {sorted(seen_spans)})")
+
+    summary_counters = (doc.get("metadata", {}).get("summary", {})
+                        .get("counters", {}))
+    cache_hits = [n for n in (counter_names | set(summary_counters))
+                  if n.endswith(".hit") or n.endswith(".miss")]
+    if not cache_hits:
+        problems.append("no cache hit/miss counters recorded "
+                        f"(counters: {sorted(counter_names)})")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome-trace JSON written by --trace")
+    ap.add_argument("--require", default=REQUIRED_SPANS,
+                    help="comma-separated span names that must appear "
+                         f"(default: {REQUIRED_SPANS})")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.trace) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"# trace FAIL: cannot read {args.trace}: {e}")
+        return 1
+    problems = validate(doc, [s.strip() for s in args.require.split(",")])
+    if problems:
+        print(f"# trace FAIL: {args.trace}")
+        for p in problems:
+            print(f"#   {p}")
+        return 1
+    n_x = sum(1 for ev in doc["traceEvents"] if ev.get("ph") == "X")
+    n_c = sum(1 for ev in doc["traceEvents"] if ev.get("ph") == "C")
+    print(f"# trace OK: {args.trace} ({n_x} spans, {n_c} counters)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

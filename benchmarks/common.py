@@ -24,6 +24,7 @@ from repro.comms import (                                           # noqa: E402
 )
 from repro.core import ALGORITHMS, get_workload                     # noqa: E402
 from repro.core.timing import HardwareModel                         # noqa: E402
+from repro.obs import count, span                                   # noqa: E402
 from repro.orbits import (                                          # noqa: E402
     WalkerStar,
     compute_access_windows,
@@ -55,20 +56,49 @@ def cache_path(prefix: str, clusters: int, sats: int,
         CACHE_DIR, f"{prefix}_{clusters}x{sats}_{float(horizon_s)!r}.pkl")
 
 
+def _counted_cache(cached, counter: str):
+    """Wrap an lru-cached function with obs memo-hit/miss counters.
+
+    Re-exposes `cache_clear`/`cache_info` (tests clear the access memo
+    around tmp-dir disk-cache checks). Hit detection diffs
+    `cache_info().hits` around the call — exact for the single-threaded
+    benchmark layer, and a no-op cost when tracing is off.
+    """
+    @functools.wraps(cached)
+    def wrapper(*args, **kwargs):
+        hits_before = cached.cache_info().hits
+        out = cached(*args, **kwargs)
+        count(f"{counter}.hit" if cached.cache_info().hits > hits_before
+              else f"{counter}.miss")
+        return out
+    wrapper.cache_clear = cached.cache_clear
+    wrapper.cache_info = cached.cache_info
+    return wrapper
+
+
 @functools.lru_cache(maxsize=32)
-def access_full(clusters: int, sats: int, horizon_s: float = HORIZON_S):
+def _access_full(clusters: int, sats: int, horizon_s: float = HORIZON_S):
     """13-station access windows for one constellation, disk-cached."""
     os.makedirs(CACHE_DIR, exist_ok=True)
     path = cache_path("aw", clusters, sats, horizon_s)
     if os.path.exists(path):
-        with open(path, "rb") as f:
-            return pickle.load(f)
-    c = WalkerStar(clusters, sats)
-    aw = compute_access_windows(c, station_subnetwork(13),
-                                horizon_s=horizon_s)
+        count("bench.disk_cache.hit")
+        with span("bench.plan_build", kind="access_windows", source="disk",
+                  scenario=f"c{clusters}s{sats}"):
+            with open(path, "rb") as f:
+                return pickle.load(f)
+    count("bench.disk_cache.miss")
+    with span("bench.plan_build", kind="access_windows", source="computed",
+              scenario=f"c{clusters}s{sats}"):
+        c = WalkerStar(clusters, sats)
+        aw = compute_access_windows(c, station_subnetwork(13),
+                                    horizon_s=horizon_s)
     with open(path, "wb") as f:
         pickle.dump(aw, f)
     return aw
+
+
+access_full = _counted_cache(_access_full, "bench.aw_cache")
 
 
 @functools.lru_cache(maxsize=256)
@@ -78,35 +108,51 @@ def access(clusters: int, sats: int, n_stations: int,
 
 
 @functools.lru_cache(maxsize=32)
-def isl_windows(clusters: int, sats: int, horizon_s: float = HORIZON_S):
+def _isl_windows(clusters: int, sats: int, horizon_s: float = HORIZON_S):
     """ISL contact windows for one constellation, disk-cached (they are
     station-independent, so one computation serves all six networks)."""
     os.makedirs(CACHE_DIR, exist_ok=True)
     path = cache_path("isl", clusters, sats, horizon_s)
     if os.path.exists(path):
-        with open(path, "rb") as f:
-            return pickle.load(f)
-    iw = compute_isl_windows(WalkerStar(clusters, sats), horizon_s=horizon_s)
+        count("bench.disk_cache.hit")
+        with span("bench.plan_build", kind="isl_windows", source="disk",
+                  scenario=f"c{clusters}s{sats}"):
+            with open(path, "rb") as f:
+                return pickle.load(f)
+    count("bench.disk_cache.miss")
+    with span("bench.plan_build", kind="isl_windows", source="computed",
+              scenario=f"c{clusters}s{sats}"):
+        iw = compute_isl_windows(WalkerStar(clusters, sats),
+                                 horizon_s=horizon_s)
     with open(path, "wb") as f:
         pickle.dump(iw, f)
     return iw
 
 
+isl_windows = _counted_cache(_isl_windows, "bench.isl_cache")
+
+
 @functools.lru_cache(maxsize=256)
-def _base_contact_plan(clusters: int, sats: int, n_stations: int,
-                       horizon_s: float = HORIZON_S):
+def _base_contact_plan_cached(clusters: int, sats: int, n_stations: int,
+                              horizon_s: float = HORIZON_S):
     """Geometry-cached default-rate ContactPlan (ground + ISL) for one
     scenario — the expensive, workload-independent part. Carries
     per-window slant ranges (`cache_geometry=True`) so any LinkModel —
     constant or range-dependent — can re-price it without a single new
     propagation call."""
-    return build_contact_plan(
-        access(clusters, sats, n_stations, horizon_s),
-        isl_windows(clusters, sats, horizon_s),
-        ConstantRate(),
-        constellation=WalkerStar(clusters, sats),
-        stations=station_subnetwork(n_stations),
-        cache_geometry=True)
+    with span("bench.plan_build", kind="contact_plan",
+              scenario=f"c{clusters}s{sats}/g{n_stations}"):
+        return build_contact_plan(
+            access(clusters, sats, n_stations, horizon_s),
+            isl_windows(clusters, sats, horizon_s),
+            ConstantRate(),
+            constellation=WalkerStar(clusters, sats),
+            stations=station_subnetwork(n_stations),
+            cache_geometry=True)
+
+
+_base_contact_plan = _counted_cache(_base_contact_plan_cached,
+                                    "bench.plan_geom_cache")
 
 
 @functools.lru_cache(maxsize=256)
@@ -159,6 +205,18 @@ def run_scenario(alg: str, clusters: int, sats: int, n_stations: int,
     and forces a ContactPlan even for non-ISL algorithms, so ground
     uploads are range-priced too. A frozen `LinkModel` instance is used
     as-is."""
+    with span("bench.scenario",
+              scenario=f"{alg}/c{clusters}s{sats}/g{n_stations}",
+              workload=workload, link_model=str(link_model),
+              train=train):
+        return _run_scenario(
+            alg, clusters, sats, n_stations, rounds=rounds, train=train,
+            seed=seed, eval_every=eval_every, horizon_s=horizon_s,
+            workload=workload, execution=execution, link_model=link_model)
+
+
+def _run_scenario(alg, clusters, sats, n_stations, *, rounds, train, seed,
+                  eval_every, horizon_s, workload, execution, link_model):
     c = WalkerStar(clusters, sats)
     aw = access(clusters, sats, n_stations, horizon_s)
     algorithm = ALGORITHMS[alg]
@@ -202,9 +260,16 @@ def emit(rows, header=("name", "value", "derived")):
 
 
 class timer:
+    """Wall-duration context manager on the monotonic clock.
+
+    `time.perf_counter()`, not `time.time()`: benchmark durations must
+    be immune to wall-clock steps (NTP slews/jumps corrupt `time.time`
+    deltas on exactly the long runs where the numbers matter).
+    """
+
     def __enter__(self):
-        self.t0 = time.time()
+        self.t0 = time.perf_counter()
         return self
 
     def __exit__(self, *a):
-        self.s = time.time() - self.t0
+        self.s = time.perf_counter() - self.t0

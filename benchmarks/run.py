@@ -7,6 +7,17 @@ Emits ``name,value,derived`` CSV per suite and writes a machine-readable
 so the perf trajectory is diffable across PRs. Default budgets keep the
 whole run CPU-tractable; --full expands to the paper's complete grids
 (including the 768-scenario Table-1 sweep).
+
+The harness always runs with `repro.obs` tracing enabled: each suite's
+artifact entry carries a ``wall_breakdown`` (per-phase wall seconds —
+plan builds, client train, selection, eval, ...) next to its ``wall_s``,
+and the artifact's top-level ``obs`` section records the run's counters
+and cache hit rates. These are *informational* wall-clock telemetry —
+machine-dependent, so `check_regression.py` reports them as trend rows
+but never fails on them; the metric rows themselves are simulation-time
+quantities and stay bitwise identical with tracing on or off. Pass
+``--trace OUT.json`` to additionally dump the full Chrome/Perfetto
+trace.
 """
 from __future__ import annotations
 
@@ -26,6 +37,8 @@ from benchmarks import (
     bench_sweep,
 )
 from benchmarks.common import emit
+
+from repro import obs  # noqa: E402  (benchmarks.common puts src/ on path)
 
 # Every suite takes (full, execution, link_model, workload); suites that
 # never run gradients ignore the execution axis (it only changes how
@@ -55,6 +68,22 @@ DEFAULT_JSON = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_sweep.json")
 
 
+def _span_totals() -> dict[str, float]:
+    s = obs.metrics_summary()
+    return {k: v["total_s"] for k, v in s.get("spans", {}).items()}
+
+
+def _breakdown(before: dict[str, float], after: dict[str, float],
+               min_s: float = 0.005) -> dict[str, float]:
+    """Per-phase wall seconds spent between two span-total snapshots."""
+    out = {}
+    for name, total in after.items():
+        d = total - before.get(name, 0.0)
+        if d >= min_s:
+            out[name] = round(d, 3)
+    return dict(sorted(out.items(), key=lambda kv: -kv[1]))
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -73,8 +102,16 @@ def main(argv=None) -> None:
                     help="re-price the sweep/accuracy suites for a "
                          "registry workload (default: the seed's "
                          "femnist_mlp constants)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write the full Chrome/Perfetto trace of the run "
+                         "(per-suite wall breakdowns land in the artifact "
+                         "regardless)")
     args = ap.parse_args(argv)
 
+    # The harness owns wall-clock telemetry: tracing is always on here
+    # (it only observes walls; metric rows are simulation-time values and
+    # stay bitwise identical — see tests/test_obs.py).
+    obs.enable()
     artifact: dict = {"schema": 1, "generated_unix": round(time.time(), 1),
                       "full": bool(args.full), "only": args.only,
                       "execution": args.execution,
@@ -82,28 +119,36 @@ def main(argv=None) -> None:
                       "workload": args.workload,
                       "suites": {}}
     names = [args.only] if args.only else list(SUITES)
-    t_total = time.time()
+    t_total = time.perf_counter()
     for name in names:
         print(f"# ==== {name} ====")
-        t0 = time.time()
+        t0 = time.perf_counter()
+        spans0 = _span_totals()
         try:
             rows = SUITES[name](args.full, args.execution, args.link_model,
                                 args.workload)
             emit(rows)
-            wall = time.time() - t0
+            wall = time.perf_counter() - t0
             print(f"# {name}: {len(rows)} rows in {wall:.1f}s")
             artifact["suites"][name] = {
                 "wall_s": round(wall, 2),
+                "wall_breakdown": _breakdown(spans0, _span_totals()),
                 "rows": [list(r) for r in rows],
             }
         except Exception as e:  # noqa: BLE001
             print(f"# {name}: FAILED {repr(e)[:300]}")
             artifact["suites"][name] = {
-                "wall_s": round(time.time() - t0, 2),
+                "wall_s": round(time.perf_counter() - t0, 2),
                 "error": repr(e)[:300],
             }
         sys.stdout.flush()
-    artifact["wall_s_total"] = round(time.time() - t_total, 2)
+    artifact["wall_s_total"] = round(time.perf_counter() - t_total, 2)
+    summary = obs.metrics_summary()
+    artifact["obs"] = {"counters": summary["counters"],
+                       "rates": summary["rates"]}
+    if args.trace:
+        obs.write_chrome_trace(args.trace)
+        print(f"# obs wrote trace to {args.trace}")
     if args.only and args.json == DEFAULT_JSON:
         # Don't clobber the cross-PR trend artifact with a partial run;
         # pass --json explicitly to write one anyway.

@@ -47,6 +47,7 @@ import math
 import numpy as np
 
 from repro.comms.isl import ISLWindows
+from repro.obs import count, span
 from repro.comms.links import (
     MIN_RATE_BPS,
     ConstantRate,
@@ -300,18 +301,28 @@ class ContactPlan:
         """
         if isl_link is None:
             isl_link = ground_link
-        ground = (self.ground if ground_link is None else
-                  [_priced_windows(ew.starts, ew.ends, ground_link,
-                                   "ground", mid_range_m=ew.mid_range_m,
-                                   range_profile=ew.range_profile)
-                   for ew in self.ground])
-        isl = (self.isl if isl_link is None else
-               {e: _priced_windows(ew.starts, ew.ends, isl_link, "ISL",
-                                   mid_range_m=ew.mid_range_m,
-                                   range_profile=ew.range_profile)
-                for e, ew in self.isl.items()})
-        return ContactPlan(n_sats=self.n_sats, ground=ground, isl=isl,
-                           neighbors=self.neighbors, horizon_s=self.horizon_s)
+        with span("comms.plan_rerate", sats=self.n_sats,
+                  ground=type(ground_link).__name__ if ground_link else None,
+                  isl=type(isl_link).__name__ if isl_link else None):
+            count("comms.plan_rerates")
+            # A range-dependent link priced here reuses the cached slant
+            # ranges instead of re-propagating: a geometry-cache hit.
+            for link in (ground_link, isl_link):
+                if link is not None and not link.geometry_free:
+                    count("comms.geometry_cache.hit")
+            ground = (self.ground if ground_link is None else
+                      [_priced_windows(ew.starts, ew.ends, ground_link,
+                                       "ground", mid_range_m=ew.mid_range_m,
+                                       range_profile=ew.range_profile)
+                       for ew in self.ground])
+            isl = (self.isl if isl_link is None else
+                   {e: _priced_windows(ew.starts, ew.ends, isl_link, "ISL",
+                                       mid_range_m=ew.mid_range_m,
+                                       range_profile=ew.range_profile)
+                    for e, ew in self.isl.items()})
+            return ContactPlan(n_sats=self.n_sats, ground=ground, isl=isl,
+                               neighbors=self.neighbors,
+                               horizon_s=self.horizon_s)
 
 
 # ---------------------------------------------------------------- build --
@@ -399,42 +410,53 @@ def build_contact_plan(
     if need_isl_geom and constellation is None:
         raise ValueError("geometry-dependent ISL link needs constellation "
                          "for slant ranges")
-    elements = (constellation.elements()
-                if need_ground_geom or need_isl_geom else None)
+    with span("comms.plan_build", sats=K,
+              isl_edges=isl_windows.n_edges if isl_windows else 0,
+              ground_geometry=need_ground_geom, isl_geometry=need_isl_geom):
+        count("comms.plan_builds")
+        if need_ground_geom or need_isl_geom:
+            # Fresh slant-range propagation: the cost `rerate` avoids.
+            count("comms.geometry_cache.miss")
+        elements = (constellation.elements()
+                    if need_ground_geom or need_isl_geom else None)
 
-    ground: list[_EdgeWindows] = []
-    if need_ground_geom:
-        lat, lon = station_latlon(stations)
-    for k in range(K):
-        s_arr, e_arr = aw.per_sat[k]
-        starts = np.asarray(s_arr, float)
-        ends = np.asarray(e_arr, float)
-        mid = prof = None
-        if need_ground_geom and len(starts):
-            mid, prof = _ground_geometry(k, starts, ends, aw, elements,
-                                         lat, lon, range_samples)
-        ground.append(_priced_windows(starts, ends, ground_link, "ground",
-                                      mid_range_m=mid, range_profile=prof))
+        ground: list[_EdgeWindows] = []
+        if need_ground_geom:
+            lat, lon = station_latlon(stations)
+        with span("comms.ground_windows", sats=K):
+            for k in range(K):
+                s_arr, e_arr = aw.per_sat[k]
+                starts = np.asarray(s_arr, float)
+                ends = np.asarray(e_arr, float)
+                mid = prof = None
+                if need_ground_geom and len(starts):
+                    mid, prof = _ground_geometry(k, starts, ends, aw,
+                                                 elements, lat, lon,
+                                                 range_samples)
+                ground.append(_priced_windows(starts, ends, ground_link,
+                                              "ground", mid_range_m=mid,
+                                              range_profile=prof))
 
-    isl: dict[tuple[int, int], _EdgeWindows] = {}
-    neighbors: dict[int, list[int]] = {}
-    if isl_windows is not None and isl_windows.n_edges:
-        for (i, j), (s_arr, e_arr) in zip(isl_windows.edges,
-                                          isl_windows.per_edge):
-            if len(s_arr) == 0:
-                continue
-            starts = np.asarray(s_arr, float)
-            ends = np.asarray(e_arr, float)
-            mid = None
-            if need_isl_geom:
-                mids = (starts + ends) / 2.0
-                pos = eci_positions_np(
-                    _elements_of(elements, [i, j]), mids)      # (2, M, 3)
-                mid = slant_range_m(pos[0], pos[1])
-            isl[(i, j)] = _priced_windows(starts, ends, isl_link, "ISL",
-                                          mid_range_m=mid)
-            neighbors.setdefault(i, []).append(j)
-            neighbors.setdefault(j, []).append(i)
+        isl: dict[tuple[int, int], _EdgeWindows] = {}
+        neighbors: dict[int, list[int]] = {}
+        if isl_windows is not None and isl_windows.n_edges:
+            with span("comms.isl_windows", edges=isl_windows.n_edges):
+                for (i, j), (s_arr, e_arr) in zip(isl_windows.edges,
+                                                  isl_windows.per_edge):
+                    if len(s_arr) == 0:
+                        continue
+                    starts = np.asarray(s_arr, float)
+                    ends = np.asarray(e_arr, float)
+                    mid = None
+                    if need_isl_geom:
+                        mids = (starts + ends) / 2.0
+                        pos = eci_positions_np(
+                            _elements_of(elements, [i, j]), mids)  # (2, M, 3)
+                        mid = slant_range_m(pos[0], pos[1])
+                    isl[(i, j)] = _priced_windows(starts, ends, isl_link,
+                                                  "ISL", mid_range_m=mid)
+                    neighbors.setdefault(i, []).append(j)
+                    neighbors.setdefault(j, []).append(i)
 
-    return ContactPlan(n_sats=K, ground=ground, isl=isl,
-                       neighbors=neighbors, horizon_s=aw.horizon_s)
+        return ContactPlan(n_sats=K, ground=ground, isl=isl,
+                           neighbors=neighbors, horizon_s=aw.horizon_s)

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import span
 from repro.orbits.access import _merge_intervals
 from repro.orbits.constants import DEFAULT_DT_S, DEFAULT_HORIZON_S, R_EARTH
 from repro.orbits.propagation import eci_positions
@@ -138,9 +139,11 @@ def compute_isl_windows(
     raw: list[list[tuple[float, float]]] = [[] for _ in range(E)]
     for c0 in range(0, n_steps, chunk_steps):
         c1 = min(c0 + chunk_steps, n_steps)
-        t = (np.arange(c0, c1) * dt_s).astype(np.float64)
-        vis = np.asarray(isl_visibility_grid(elements, ei, ej,
-                                             jnp.asarray(t), max_range_m))
+        with span("comms.isl_chunk", t0_step=c0, steps=c1 - c0, edges=E):
+            t = (np.arange(c0, c1) * dt_s).astype(np.float64)
+            vis = np.asarray(isl_visibility_grid(elements, ei, ej,
+                                                 jnp.asarray(t),
+                                                 max_range_m))
         # Vectorized edge extraction across all edge tracks (access.py idiom).
         padded = np.zeros((E, vis.shape[1] + 2), bool)
         padded[:, 1:-1] = vis

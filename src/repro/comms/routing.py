@@ -21,6 +21,7 @@ import dataclasses
 import heapq
 
 from repro.comms.contact_plan import ContactPlan
+from repro.obs import count, span
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +56,13 @@ def earliest_arrival(plan: ContactPlan, src: int, t_ready: float,
     Returns None when no ground pass exists within the plan's horizon.
     With no ISL edges this degenerates to the direct upload.
     """
+    with span("comms.route", src=src, max_hops=max_hops):
+        return _earliest_arrival(plan, src, t_ready, n_bytes, max_hops)
+
+
+def _earliest_arrival(plan: ContactPlan, src: int, t_ready: float,
+                      n_bytes: float, max_hops: int) -> Route | None:
+    count("comms.routes")
     # Dijkstra labels: (data-available time, hops, seq, sat, path,
     # first-leg start); `seq` breaks ordering ties before the
     # non-comparable payload fields. Labels are pruned per (sat, hops) —
@@ -99,4 +107,10 @@ def earliest_arrival(plan: ContactPlan, src: int, t_ready: float,
                                   first_leg if first_leg is not None
                                   else s))
             seq += 1
+    # Observability: relay-enabled searches that end in the direct upload
+    # are "fallbacks" — the ISL graph bought nothing at this instant.
+    if best is None:
+        count("comms.routes_unreachable")
+    elif max_hops > 0 and best.isl_hops == 0:
+        count("comms.route_fallback_direct")
     return best

@@ -7,6 +7,11 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
       --out results/dryrun.json
+
+Per-pair progress is reported through `repro.obs.log_record` —
+structured JSON lines on stderr, quiet by default; set REPRO_LOG=1 (or
+--log) to see them. The JSON artifact (--out) is the canonical output
+either way.
 """
 import os
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
@@ -29,6 +34,7 @@ from repro.configs import get_config, lm_arch_ids
 from repro.configs.shapes import INPUT_SHAPES, input_specs, longctx_variant
 from repro.launch.mesh import make_production_mesh
 from repro.models.lm.transformer import init_params, prefill
+from repro.obs import log_record, set_logging, span
 from repro.optim.adam import adam_init
 from repro.sharding.ctx import activation_sharding, expert_parallel, model_axis
 from repro.sharding.specs import (
@@ -157,9 +163,11 @@ def lower_pair(arch: str, shape_name: str, mesh, *, remat: bool = True,
             return {"arch": arch, "shape": shape_name, "status": "skipped",
                     "note": note}
 
-    t0 = time.time()
-    compiled = _compile(cfg, shape, mesh, remat=remat, donate=donate, ep=ep)
-    compile_s = time.time() - t0
+    t0 = time.perf_counter()
+    with span("launch.compile", arch=arch, shape=shape_name):
+        compiled = _compile(cfg, shape, mesh, remat=remat, donate=donate,
+                            ep=ep)
+    compile_s = time.perf_counter() - t0
     raw = metrics_from_compiled(compiled)
     mem = compiled.memory_analysis()
 
@@ -232,7 +240,12 @@ def main(argv=None):
     ap.add_argument("--ep", action="store_true",
                     help="expert-parallel token all-to-all MoE (shard_map)")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--log", action="store_true",
+                    help="emit structured progress records on stderr "
+                         "(same as REPRO_LOG=1)")
     args = ap.parse_args(argv)
+    if args.log:
+        set_logging(True)
 
     meshes = []
     if args.both_meshes:
@@ -250,33 +263,39 @@ def main(argv=None):
 
     results = []
     for mesh in meshes:
+        mesh_tag = "x".join(str(s) for s in mesh.devices.shape)
         for arch, shape in pairs:
-            tag = f"[{arch} x {shape} @ {mesh.devices.shape}]"
             try:
                 r = lower_pair(arch, shape, mesh, remat=not args.no_remat,
                                calibrate=not args.no_calibrate, ep=args.ep)
                 results.append(r)
                 if r["status"] == "ok":
-                    rf = r["roofline"]
-                    print(f"{tag} OK compile={r['compile_s']}s "
-                          f"flops={r['cost_flops']:.3e} "
-                          f"bytes={r['cost_bytes']:.3e} "
-                          f"coll={sum(r['collective_bytes'].values()):.3e}B "
-                          f"bound={rf['dominant']}")
+                    log_record("dryrun.pair", arch=arch, shape=shape,
+                               mesh=mesh_tag, status="ok",
+                               compile_s=r["compile_s"],
+                               flops=r["cost_flops"],
+                               bytes=r["cost_bytes"],
+                               collective_bytes=sum(
+                                   r["collective_bytes"].values()),
+                               bound=r["roofline"]["dominant"])
                 else:
-                    print(f"{tag} SKIP: {r['note']}")
+                    log_record("dryrun.pair", arch=arch, shape=shape,
+                               mesh=mesh_tag, status="skipped",
+                               note=r["note"])
             except Exception as e:  # noqa: BLE001 — report and continue
                 results.append({"arch": arch, "shape": shape,
                                 "status": "error", "error": repr(e)[:500]})
-                print(f"{tag} ERROR: {repr(e)[:300]}")
-            sys.stdout.flush()
+                log_record("dryrun.pair", arch=arch, shape=shape,
+                           mesh=mesh_tag, status="error",
+                           error=repr(e)[:300])
+            sys.stderr.flush()
 
     if args.out:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1)
-        print(f"wrote {args.out}")
+        log_record("dryrun.wrote", path=args.out)
     n_err = sum(1 for r in results if r["status"] == "error")
-    print(f"done: {len(results)} pairs, {n_err} errors")
+    log_record("dryrun.done", pairs=len(results), errors=n_err)
     return 1 if n_err else 0
 
 

@@ -8,6 +8,14 @@ on the host; full configs use the serve-mode sharding of the dry-run.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b \
       --requests 8 --batch 4 --max-new 32
+
+Progress is reported through `repro.obs.log_record` — structured JSON
+lines on stderr, quiet by default; set REPRO_LOG=1 (or --log) to see
+them. With tracing or logging on, the decode loop measures per-token
+latency (`block_until_ready` per step — observation only, values are
+unchanged) and the final record carries tokens/s and p50/p99 latency;
+`launch.decode_tokens` / `launch.requests_served` counters land in the
+tracer.
 """
 from __future__ import annotations
 
@@ -21,23 +29,45 @@ import numpy as np
 from repro.configs import get_config, lm_arch_ids
 from repro.models.lm import init_params
 from repro.models.lm.transformer import prefill
+from repro.obs import count, enabled as obs_enabled
+from repro.obs import log_enabled, log_record, set_logging, span
 from repro.train.step import make_serve_step
 
 
 def serve_batch(cfg, params, prompts, max_new: int, enc=None):
-    """Prefill one arrival batch and decode all requests lock-step."""
+    """Prefill one arrival batch and decode all requests lock-step.
+
+    Returns (tokens, per_step_latency_s); the latency list is empty
+    unless obs tracing or logging is on (measuring it requires a
+    per-step device sync, which would otherwise perturb pipelining).
+    """
     B, Lp = prompts.shape
     max_seq = Lp + max_new + 8
-    logits, cache = jax.jit(
-        lambda p, t: prefill(cfg, p, t, max_seq, enc_embeds=enc)
-    )(params, prompts)
+    with span("launch.prefill", batch=B, prompt_len=Lp):
+        logits, cache = jax.jit(
+            lambda p, t: prefill(cfg, p, t, max_seq, enc_embeds=enc)
+        )(params, prompts)
     step = jax.jit(make_serve_step(cfg))
     tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
     out = [tok]
-    for _ in range(max_new):
-        tok, _, cache = step(params, tok, cache)
-        out.append(tok)
-    return jnp.concatenate(out, axis=1)
+    measure = obs_enabled() or log_enabled()
+    lat_s: list[float] = []
+    with span("launch.decode", batch=B, max_new=max_new):
+        for _ in range(max_new):
+            t0 = time.perf_counter()
+            tok, _, cache = step(params, tok, cache)
+            if measure:
+                jax.block_until_ready(tok)
+                lat_s.append(time.perf_counter() - t0)
+            out.append(tok)
+    count("launch.decode_tokens", B * max_new)
+    return jnp.concatenate(out, axis=1), lat_s
+
+
+def _quantile_ms(lat_s: list[float], q: float) -> float:
+    """Nearest-rank quantile of a latency list, in milliseconds."""
+    ordered = sorted(lat_s)
+    return round(ordered[int(q * (len(ordered) - 1))] * 1e3, 2)
 
 
 def main(argv=None):
@@ -48,19 +78,28 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--log", action="store_true",
+                    help="emit structured progress records on stderr "
+                         "(same as REPRO_LOG=1)")
     args = ap.parse_args(argv)
+    if args.log:
+        set_logging(True)
 
     cfg = get_config(args.arch)
     if not args.full_config:
         cfg = cfg.reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
+    log_record("serve.start", arch=cfg.name, requests=args.requests,
+               batch=args.batch, prompt_len=args.prompt_len,
+               max_new=args.max_new)
 
     # Request queue -> arrival batches of size --batch.
     queue = [rng.integers(0, cfg.vocab_size, args.prompt_len, dtype=np.int32)
              for _ in range(args.requests)]
     served = 0
-    t0 = time.time()
+    lat_all: list[float] = []
+    t0 = time.perf_counter()
     while queue:
         batch = queue[:args.batch]
         queue = queue[args.batch:]
@@ -69,14 +108,24 @@ def main(argv=None):
         if cfg.encoder is not None:
             enc = jnp.zeros((prompts.shape[0], cfg.encoder.n_frames,
                              cfg.d_model), cfg.dtype)
-        gen = serve_batch(cfg, params, prompts, args.max_new, enc=enc)
+        with span("launch.serve_batch", batch=prompts.shape[0]):
+            gen, lat_s = serve_batch(cfg, params, prompts, args.max_new,
+                                     enc=enc)
         served += prompts.shape[0]
-        print(f"batch of {prompts.shape[0]}: generated "
-              f"{gen.shape[1]} tokens/request "
-              f"({served}/{args.requests} served)")
-    dt = time.time() - t0
-    print(f"total: {served} requests x {args.max_new} tokens in {dt:.1f}s "
-          f"({served * args.max_new / dt:.1f} tok/s)")
+        count("launch.requests_served", prompts.shape[0])
+        lat_all.extend(lat_s)
+        log_record("serve.batch", batch=int(prompts.shape[0]),
+                   tokens_per_request=int(gen.shape[1]),
+                   served=served, total=args.requests)
+    dt = time.perf_counter() - t0
+    final = {"requests": served, "max_new": args.max_new,
+             "wall_s": round(dt, 2),
+             "tokens_per_s": round(served * args.max_new / dt, 1)}
+    if lat_all:
+        # First decode step carries jit compile; quantiles absorb it.
+        final["decode_p50_ms"] = _quantile_ms(lat_all, 0.50)
+        final["decode_p99_ms"] = _quantile_ms(lat_all, 0.99)
+    log_record("serve.done", **final)
 
 
 if __name__ == "__main__":

@@ -6,6 +6,11 @@ deployment only changes `--mesh`).
 
   PYTHONPATH=src python -m repro.launch.train --arch gemma-2b \
       --steps 50 --batch 4 --seq 128 --ckpt results/ckpt/gemma
+
+Progress is reported through `repro.obs.log_record` — structured JSON
+lines on stderr, quiet by default; set REPRO_LOG=1 (or --log) to see
+them. Per-step spans + a `launch.train_tokens` counter land in the
+`repro.obs` tracer when tracing is enabled.
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ from repro.checkpoint.io import restore_checkpoint, save_checkpoint
 from repro.configs import get_config, lm_arch_ids
 from repro.data.tokens import synthetic_token_batch
 from repro.models.lm import count_params, init_params
+from repro.obs import count, log_record, set_logging, span
 from repro.optim.adam import adam_init
 from repro.train.step import make_train_step
 
@@ -34,19 +40,26 @@ def main(argv=None):
                     help="use the production config (TPU meshes only)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--log", action="store_true",
+                    help="emit structured progress records on stderr "
+                         "(same as REPRO_LOG=1)")
     args = ap.parse_args(argv)
+    if args.log:
+        set_logging(True)
 
     cfg = get_config(args.arch)
     if not args.full_config:
         cfg = cfg.reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
-    print(f"{cfg.name}: {count_params(params)/1e6:.2f}M params")
+    log_record("train.start", arch=cfg.name,
+               params_m=round(count_params(params) / 1e6, 2),
+               steps=args.steps, batch=args.batch, seq=args.seq, lr=args.lr)
     opt = adam_init(params)
     step = jax.jit(make_train_step(cfg, lr=args.lr, remat=False))
 
     import numpy as np
     rng = np.random.default_rng(0)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(args.steps):
         toks = synthetic_token_batch(args.batch, args.seq, cfg.vocab_size,
                                      seed=int(rng.integers(1 << 30)))
@@ -57,15 +70,24 @@ def main(argv=None):
         if cfg.encoder is not None:
             batch["enc_embeds"] = jnp.zeros(
                 (args.batch, cfg.encoder.n_frames, cfg.d_model), cfg.dtype)
-        params, opt, metrics = step(params, opt, batch)
+        with span("launch.train_step", step=i):
+            params, opt, metrics = step(params, opt, batch)
+        count("launch.train_tokens", args.batch * args.seq)
         if i % 10 == 0 or i == args.steps - 1:
-            print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
-                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+            dt = time.perf_counter() - t0
+            log_record("train.step", step=i,
+                       loss=round(float(metrics["loss"]), 4),
+                       s_per_step=round(dt / (i + 1), 3),
+                       tokens_per_s=round(
+                           args.batch * args.seq * (i + 1) / dt, 1))
         if args.ckpt and (i + 1) % args.ckpt_every == 0:
             save_checkpoint(args.ckpt, params, step=i + 1)
-            print(f"  checkpointed -> {args.ckpt}.npz")
+            log_record("train.checkpoint", path=f"{args.ckpt}.npz",
+                       step=i + 1)
     if args.ckpt:
         save_checkpoint(args.ckpt, params, step=args.steps)
+        log_record("train.checkpoint", path=f"{args.ckpt}.npz",
+                   step=args.steps, final=True)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,47 @@
+"""repro.obs — phase-level tracing, counters, and wall-clock telemetry.
+
+Public surface:
+
+  span(name, **args)    nestable timing context manager (no-op when off)
+  count(name, n=1)      named counter (no-op when off)
+  enable() / disable()  install / remove the global tracer (default: off)
+  enabled()             is a tracer installed?
+  tracing()             scoped enable (tests)
+  metrics_summary()     counters + per-phase aggregates + hit rates
+  write_chrome_trace()  Perfetto/chrome://tracing-compatible trace.json
+  write_jsonl()         flat one-object-per-line event log
+  log_record()          structured launcher progress (REPRO_LOG=1 toggle)
+
+Imports nothing heavy (no jax/numpy): safe to wire into every layer.
+"""
+from repro.obs.export import chrome_trace, write_chrome_trace, write_jsonl
+from repro.obs.logging import log_enabled, log_record, set_logging
+from repro.obs.trace import (
+    Tracer,
+    count,
+    disable,
+    enable,
+    enabled,
+    get_tracer,
+    metrics_summary,
+    span,
+    tracing,
+)
+
+__all__ = [
+    "Tracer",
+    "chrome_trace",
+    "count",
+    "disable",
+    "enable",
+    "enabled",
+    "get_tracer",
+    "log_enabled",
+    "log_record",
+    "metrics_summary",
+    "set_logging",
+    "span",
+    "tracing",
+    "write_chrome_trace",
+    "write_jsonl",
+]

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import span
 from repro.orbits.constants import (
     DEFAULT_DT_S,
     DEFAULT_ELEVATION_MASK_DEG,
@@ -142,9 +143,12 @@ def compute_access_windows(
     ]
     for c0 in range(0, n_steps, chunk_steps):
         c1 = min(c0 + chunk_steps, n_steps)
-        t = (np.arange(c0, c1) * dt_s).astype(np.float64)
-        vis = np.asarray(visibility_grid(elements, lat, lon, jnp.asarray(t),
-                                         mask_deg=mask_deg))
+        with span("orbits.access_chunk", t0_step=c0, steps=c1 - c0,
+                  sats=K, stations=G):
+            t = (np.arange(c0, c1) * dt_s).astype(np.float64)
+            vis = np.asarray(visibility_grid(elements, lat, lon,
+                                             jnp.asarray(t),
+                                             mask_deg=mask_deg))
         # Vectorized edge extraction across all (sat, station) tracks.
         padded = np.zeros((K, G, vis.shape[2] + 2), bool)
         padded[:, :, 1:-1] = vis

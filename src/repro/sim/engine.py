@@ -53,6 +53,7 @@ from repro.core.timing import HardwareModel
 from repro.core.workload import Workload, get_workload, validate_execution
 from repro.data.federated import FederatedDataset
 from repro.models.femnist_mlp import femnist_mlp_apply, femnist_mlp_init
+from repro.obs import count, enabled as obs_enabled, span
 from repro.orbits import constants as C
 from repro.orbits.access import AccessWindows, compute_access_windows
 from repro.orbits.walker import WalkerStar
@@ -147,8 +148,12 @@ class ConstellationSim:
             self.hw = HardwareModel()
         self.data = data
         self.init_fn = self.workload.init_fn
-        self.aw = access if access is not None else compute_access_windows(
-            constellation, stations, horizon_s=self.cfg.horizon_s)
+        if access is not None:
+            self.aw = access
+        else:
+            with span("sim.access_windows", sats=constellation.n_sats):
+                self.aw = compute_access_windows(
+                    constellation, stations, horizon_s=self.cfg.horizon_s)
         # Comms: algorithms marked `isl=True` (or an explicit link model)
         # plan against a ContactPlan; everything else keeps the seed's
         # AccessWindows-only path, bit for bit.
@@ -293,9 +298,21 @@ class ConstellationSim:
                 lambda a: jnp.broadcast_to(a, (len(ks),) + a.shape),
                 global_params)
         rngs = jax.random.split(rng, len(ks))
-        update = self._updater(self._bound(steps_np), anchored=anchored)
-        return update(params0, anchors, x, y, n, steps,
-                      self.alg.strategy.prox_mu, rngs)
+        bound = self._bound(steps_np)
+        # jit-compile detection: a (bound, anchored) key this run has not
+        # dispatched yet pays XLA compilation inside its first call, so
+        # the span's first-call timing isolates compile from steady-state.
+        fresh = (bound, anchored) not in self._updaters
+        update = self._updater(bound, anchored=anchored)
+        if fresh:
+            count("sim.jit_compiles")
+        with span("sim.client_train", clients=len(ks), step_bound=bound,
+                  jit_compile=fresh):
+            out = update(params0, anchors, x, y, n, steps,
+                         self.alg.strategy.prox_mu, rngs)
+            if obs_enabled():
+                jax.block_until_ready(out)   # honest walls; values untouched
+        return out
 
     def _run_clients_mesh(self, global_params, ks: list[int],
                           epochs: list[int], rng, *, weights, staleness,
@@ -337,9 +354,19 @@ class ConstellationSim:
                 lambda s, g: jnp.concatenate(
                     [s, jnp.broadcast_to(g, (pad,) + g.shape)]),
                 anchors, global_params)
-        step_fn = self._mesh_step(self._bound(steps_np), mesh)
-        return step_fn(global_params, anchors, x, y, n, steps, w, stale,
-                       self.alg.strategy.prox_mu, rngs)
+        bound = self._bound(steps_np)
+        fresh = (bound, int(mesh.shape[self.workload.mesh_axis])) \
+            not in self._mesh_steps
+        step_fn = self._mesh_step(bound, mesh)
+        if fresh:
+            count("sim.jit_compiles")
+        with span("sim.client_train", mode="mesh", clients=len(ks),
+                  step_bound=bound, jit_compile=fresh):
+            out = step_fn(global_params, anchors, x, y, n, steps, w, stale,
+                          self.alg.strategy.prox_mu, rngs)
+            if obs_enabled():
+                jax.block_until_ready(out)
+        return out
 
     def _train_round(self, global_params, ks: list[int], epochs: list[int],
                      rng, *, weights, staleness, anchors=None):
@@ -351,16 +378,24 @@ class ConstellationSim:
                 staleness=staleness, anchors=anchors)
         stacked = self._run_clients(global_params, ks, epochs, rng,
                                     anchors=anchors)
-        return self.alg.strategy.aggregate(
-            global_params, stacked, jnp.asarray(weights),
-            jnp.asarray(staleness))
+        with span("sim.aggregate", strategy=self.alg.strategy.name,
+                  clients=len(ks)):
+            out = self.alg.strategy.aggregate(
+                global_params, stacked, jnp.asarray(weights),
+                jnp.asarray(staleness))
+            if obs_enabled():
+                jax.block_until_ready(out)
+        return out
 
     def _finish_round(self, rounds: list[RoundRecord], curve: list,
                       global_params, *, t_start: float, t_end: float,
                       participants, epochs, idle_s, compute_s, comm_s,
                       relays, staleness, relay_hops, comms_bytes,
                       do_eval: bool) -> RoundRecord:
-        """Construct the RoundRecord, run the eval stage, and append."""
+        """Construct the RoundRecord, run the eval slot, and append.
+
+        `do_eval` is the eval *cadence* (this round hits the eval slot);
+        accuracy is only computed when the run trains."""
         rec = RoundRecord(
             idx=len(rounds), t_start=t_start, t_end=t_end,
             participants=participants, epochs=epochs, idle_s=idle_s,
@@ -371,9 +406,16 @@ class ConstellationSim:
         if self.cfg.record_params and global_params is not None:
             self._params_hist.append(jax.device_get(global_params))
         if do_eval:
-            rec.accuracy = self._eval(global_params, t_end)
-            curve.append((rec.idx, t_end, rec.accuracy))
+            # The eval slot exists in the round protocol whether or not
+            # this run trains; timing-only sweeps record it as an empty
+            # span (trained=False) so traces show the full phase chain.
+            with span("sim.eval", round=rec.idx, trained=self.cfg.train):
+                if self.cfg.train:
+                    rec.accuracy = self._eval(global_params, t_end)
+                    curve.append((rec.idx, t_end, rec.accuracy))
+                count("sim.evals")
         rounds.append(rec)
+        count("sim.rounds")
         return rec
 
     def _result(self, rounds: list[RoundRecord], curve: list,
@@ -395,10 +437,11 @@ class ConstellationSim:
         per distinct participant count.
         """
         c = min(self.cfg.clients_per_round, self.constellation.n_sats)
-        plans = self.alg.selector.select(
-            self.aw, t, range(self.constellation.n_sats), c,
-            self.alg.strategy, self.hw, self.alg.local_epochs,
-            self.alg.min_epochs, plan=self.plan)
+        with span("sim.select", stage="eval"):
+            plans = self.alg.selector.select(
+                self.aw, t, range(self.constellation.n_sats), c,
+                self.alg.strategy, self.hw, self.alg.local_epochs,
+                self.alg.min_epochs, plan=self.plan)
         ks = [p.k for p in plans] or list(range(min(c, self.data.n_clients)))
         pad = self._bound([len(ks)]) - len(ks)
         ks_p = ks + [ks[0]] * pad
@@ -426,43 +469,47 @@ class ConstellationSim:
         for r in range(cfg.max_rounds):
             if t >= cfg.horizon_s:
                 break
-            plans = alg.selector.select(
-                self.aw, t, range(K), c, alg.strategy, hw,
-                alg.local_epochs, alg.min_epochs, plan=self.plan)
-            if not plans:
-                break
-            t_end = max(p.tx_end for p in plans)
-            if t_end > cfg.horizon_s:
-                break
+            with span("sim.round", idx=r) as round_span:
+                with span("sim.select", stage="train"):
+                    plans = alg.selector.select(
+                        self.aw, t, range(K), c, alg.strategy, hw,
+                        alg.local_epochs, alg.min_epochs, plan=self.plan)
+                if not plans:
+                    round_span.set(aborted="no_plans")
+                    break
+                t_end = max(p.tx_end for p in plans)
+                if t_end > cfg.horizon_s:
+                    round_span.set(aborted="horizon")
+                    break
 
-            if cfg.train:
-                rng, sub = jax.random.split(rng)
-                ks = [p.k for p in plans]
-                global_params = self._train_round(
-                    global_params, ks, [p.epochs for p in plans], sub,
-                    weights=jnp.asarray(self.data.n[ks], jnp.float32),
-                    staleness=jnp.zeros((len(plans),), jnp.int32))
+                if cfg.train:
+                    rng, sub = jax.random.split(rng)
+                    ks = [p.k for p in plans]
+                    global_params = self._train_round(
+                        global_params, ks, [p.epochs for p in plans], sub,
+                        weights=jnp.asarray(self.data.n[ks], jnp.float32),
+                        staleness=jnp.zeros((len(plans),), jnp.int32))
 
-            self._finish_round(
-                rounds, curve, global_params,
-                t_start=t, t_end=t_end,
-                participants=[p.k for p in plans],
-                epochs=[p.epochs for p in plans],
-                idle_s=[max(0.0, (t_end - t)
-                            - (p.rx_end - p.rx_start)
-                            - (p.train_end - p.train_start)
-                            - (p.tx_end - p.tx_start)) for p in plans],
-                compute_s=[p.train_end - p.train_start for p in plans],
-                comm_s=[(p.rx_end - p.rx_start) + (p.tx_end - p.tx_start)
-                        for p in plans],
-                relays=[p.relay for p in plans],
-                staleness=[0] * len(plans),
-                relay_hops=[p.isl_hops for p in plans],
-                comms_bytes=[p.comm_bytes for p in plans],
-                do_eval=cfg.train and (r % cfg.eval_every == 0
-                                       or r == cfg.max_rounds - 1),
-            )
-            t = t_end
+                self._finish_round(
+                    rounds, curve, global_params,
+                    t_start=t, t_end=t_end,
+                    participants=[p.k for p in plans],
+                    epochs=[p.epochs for p in plans],
+                    idle_s=[max(0.0, (t_end - t)
+                                - (p.rx_end - p.rx_start)
+                                - (p.train_end - p.train_start)
+                                - (p.tx_end - p.tx_start)) for p in plans],
+                    compute_s=[p.train_end - p.train_start for p in plans],
+                    comm_s=[(p.rx_end - p.rx_start)
+                            + (p.tx_end - p.tx_start) for p in plans],
+                    relays=[p.relay for p in plans],
+                    staleness=[0] * len(plans),
+                    relay_hops=[p.isl_hops for p in plans],
+                    comms_bytes=[p.comm_bytes for p in plans],
+                    do_eval=(r % cfg.eval_every == 0
+                             or r == cfg.max_rounds - 1),
+                )
+                t = t_end
         return self._result(rounds, curve, global_params)
 
     # ------------------------------------------------------------------ #
@@ -519,46 +566,50 @@ class ConstellationSim:
                 continue
 
             # --- aggregate the buffer ---------------------------------- #
-            t_agg = tx_end
-            staleness = np.array([version - b[1] for b in buffer], np.int32)
-            ns = np.array([float(self.data.n[b[0]]) if cfg.train else 1.0
-                           for b in buffer], np.float32)
-            weights = buffer_weights(ns, staleness,
-                                     alg.strategy.max_staleness)
-            if cfg.train:
-                ks = [b[0] for b in buffer]
-                anchors = jax.tree.map(
-                    lambda *xs: jnp.stack(xs),
-                    *[history[b[1]] for b in buffer])
-                rng, sub = jax.random.split(rng)
-                global_params = self._train_round(
-                    global_params, ks, [b[2] for b in buffer], sub,
-                    weights=weights, staleness=staleness, anchors=anchors)
-            version += 1
-            history[version] = global_params
-            # The buffer-filling satellite re-downloads the *new* model.
-            schedule_cycle(k, tx_end, version)
-            # Prune history entries no in-flight client still anchors on.
-            prune_history(history, (e[2] for e in heap), version)
+            with span("sim.round", idx=len(rounds), mode="async",
+                      flush=len(buffer)):
+                t_agg = tx_end
+                staleness = np.array([version - b[1] for b in buffer],
+                                     np.int32)
+                ns = np.array([float(self.data.n[b[0]]) if cfg.train else 1.0
+                               for b in buffer], np.float32)
+                weights = buffer_weights(ns, staleness,
+                                         alg.strategy.max_staleness)
+                if cfg.train:
+                    ks = [b[0] for b in buffer]
+                    anchors = jax.tree.map(
+                        lambda *xs: jnp.stack(xs),
+                        *[history[b[1]] for b in buffer])
+                    rng, sub = jax.random.split(rng)
+                    global_params = self._train_round(
+                        global_params, ks, [b[2] for b in buffer], sub,
+                        weights=weights, staleness=staleness,
+                        anchors=anchors)
+                version += 1
+                history[version] = global_params
+                # The buffer-filling satellite re-downloads the *new* model.
+                schedule_cycle(k, tx_end, version)
+                # Prune history entries no in-flight client still anchors on.
+                prune_history(history, (e[2] for e in heap), version)
 
-            self._finish_round(
-                rounds, curve, global_params,
-                t_start=last_agg_t, t_end=t_agg,
-                participants=[b[0] for b in buffer],
-                epochs=[b[2] for b in buffer],
-                # Async clients only idle while a pass is out of reach after
-                # the duty-cycle cap ends; within the buffer span their time
-                # is train_span + comms.
-                idle_s=[max(0.0, (b[6] - b[3]) - b[4] - b[5])
-                        for b in buffer],
-                compute_s=[b[4] for b in buffer],
-                comm_s=[b[5] for b in buffer],
-                relays=[-1] * len(buffer),
-                staleness=staleness.tolist(),
-                relay_hops=[0] * len(buffer),
-                comms_bytes=[2.0 * hw.model_bytes] * len(buffer),
-                do_eval=cfg.train and (len(rounds) % cfg.eval_every == 0),
-            )
-            last_agg_t = t_agg
-            buffer = []
+                self._finish_round(
+                    rounds, curve, global_params,
+                    t_start=last_agg_t, t_end=t_agg,
+                    participants=[b[0] for b in buffer],
+                    epochs=[b[2] for b in buffer],
+                    # Async clients only idle while a pass is out of reach
+                    # after the duty-cycle cap ends; within the buffer span
+                    # their time is train_span + comms.
+                    idle_s=[max(0.0, (b[6] - b[3]) - b[4] - b[5])
+                            for b in buffer],
+                    compute_s=[b[4] for b in buffer],
+                    comm_s=[b[5] for b in buffer],
+                    relays=[-1] * len(buffer),
+                    staleness=staleness.tolist(),
+                    relay_hops=[0] * len(buffer),
+                    comms_bytes=[2.0 * hw.model_bytes] * len(buffer),
+                    do_eval=(len(rounds) % cfg.eval_every == 0),
+                )
+                last_agg_t = t_agg
+                buffer = []
         return self._result(rounds, curve, global_params)

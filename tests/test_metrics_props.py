@@ -1,0 +1,137 @@
+"""RoundRecord / SimResult derived properties (sim/metrics.py).
+
+These are the quantities every benchmark row and paper claim is computed
+from; the edge cases (empty rounds, empty curves, zero-length rounds)
+are exactly the shapes a skipped/degenerate sweep cell produces."""
+import pytest
+
+from repro.sim.metrics import RoundRecord, SimResult
+
+
+def _round(idx=0, t_start=0.0, t_end=3600.0, participants=(0, 1),
+           idle_s=(600.0, 1200.0), compute_s=(100.0, 100.0),
+           comm_s=(50.0, 50.0), relay_hops=(), comms_bytes=(),
+           accuracy=None):
+    n = len(participants)
+    return RoundRecord(
+        idx=idx, t_start=t_start, t_end=t_end,
+        participants=list(participants), epochs=[1] * n,
+        idle_s=list(idle_s), compute_s=list(compute_s),
+        comm_s=list(comm_s), relays=[-1] * n, staleness=[0] * n,
+        accuracy=accuracy, relay_hops=list(relay_hops),
+        comms_bytes=list(comms_bytes))
+
+
+# ----------------------------------------------------------- RoundRecord
+
+
+def test_round_duration_and_totals():
+    r = _round(t_start=100.0, t_end=7300.0, relay_hops=(2, 1),
+               comms_bytes=(1e6, 2.5e6))
+    assert r.duration_s == 7200.0
+    assert r.total_relay_hops == 3
+    assert r.total_comms_bytes == pytest.approx(3.5e6)
+    assert isinstance(r.total_comms_bytes, float)
+
+
+def test_round_defaults_are_empty_accounting():
+    r = _round()
+    assert r.relay_hops == [] and r.comms_bytes == []
+    assert r.total_relay_hops == 0
+    assert r.total_comms_bytes == 0.0
+    assert r.execution == "host"
+
+
+def test_mean_idle_frac():
+    # (600 + 1200) / (2 participants * 3600 s) = 0.25
+    assert _round().mean_idle_frac == pytest.approx(0.25)
+
+
+def test_mean_idle_frac_edge_cases():
+    # no participants: defined as 0, not a ZeroDivisionError
+    assert _round(participants=(), idle_s=()).mean_idle_frac == 0.0
+    # zero-duration round: guarded denominator, stays finite
+    z = _round(t_start=50.0, t_end=50.0, idle_s=(0.0, 0.0))
+    assert z.duration_s == 0.0
+    assert z.mean_idle_frac == 0.0
+
+
+# ------------------------------------------------------------- SimResult
+
+
+def _result(rounds, curve=(), algorithm="fedavg", n_sats=4, n_stations=1):
+    return SimResult(algorithm=algorithm, n_sats=n_sats,
+                     n_stations=n_stations, rounds=list(rounds),
+                     accuracy_curve=[tuple(c) for c in curve])
+
+
+def test_empty_result_properties():
+    res = _result([])
+    assert res.n_rounds == 0
+    assert res.max_accuracy == 0.0
+    assert res.final_accuracy == 0.0
+    assert res.total_time_s == 0.0
+    assert res.mean_round_duration_s == 0.0
+    assert res.mean_idle_per_round_s == 0.0
+    assert res.total_relay_hops == 0
+    assert res.total_comms_bytes == 0.0
+    assert res.time_to_accuracy(0.1) is None
+
+
+def test_result_aggregates_over_rounds():
+    rounds = [
+        _round(idx=0, t_start=0.0, t_end=3600.0,
+               idle_s=(0.0, 7200.0), relay_hops=(1,), comms_bytes=(1e6,)),
+        _round(idx=1, t_start=3600.0, t_end=10800.0,
+               idle_s=(3600.0, 3600.0), relay_hops=(0, 2),
+               comms_bytes=(2e6, 3e6)),
+    ]
+    res = _result(rounds)
+    assert res.n_rounds == 2
+    assert res.total_time_s == 10800.0          # last round's t_end
+    assert res.mean_round_duration_s == pytest.approx((3600 + 7200) / 2)
+    # per-round mean idle: 3600 and 3600 -> mean 3600
+    assert res.mean_idle_per_round_s == pytest.approx(3600.0)
+    assert res.total_relay_hops == 3
+    assert res.total_comms_bytes == pytest.approx(6e6)
+
+
+def test_accuracy_curve_properties():
+    curve = [(0, 3600.0, 0.10), (2, 10800.0, 0.52), (4, 18000.0, 0.48)]
+    res = _result([_round()], curve=curve)
+    assert res.max_accuracy == pytest.approx(0.52)
+    assert res.final_accuracy == pytest.approx(0.48)   # last, not best
+    # first crossing wins, even if accuracy later dips
+    assert res.time_to_accuracy(0.5) == pytest.approx(10800.0)
+    assert res.time_to_accuracy(0.10) == pytest.approx(3600.0)
+    assert res.time_to_accuracy(0.9) is None
+
+
+def test_summary_rounding_and_keys():
+    r = _round(t_start=0.0, t_end=5000.0, idle_s=(1000.0, 1001.0),
+               relay_hops=(2,), comms_bytes=(1234567.0,))
+    res = _result([r], curve=[(0, 5000.0, 0.123456)])
+    s = res.summary()
+    assert s == {
+        "algorithm": "fedavg",
+        "execution": "host",
+        "n_sats": 4,
+        "n_stations": 1,
+        "rounds": 1,
+        "max_accuracy": 0.1235,                       # round(…, 4)
+        "final_accuracy": 0.1235,
+        "mean_round_duration_h": round(5000.0 / 3600, 3),
+        "mean_idle_per_round_h": round(1000.5 / 3600, 3),
+        "total_days": round(5000.0 / 86400, 2),
+        "relay_hops": 2,
+        "comms_mb": 1.235,                            # round(…, 3)
+    }
+
+
+def test_summary_empty_is_all_zero():
+    s = _result([]).summary()
+    assert s["rounds"] == 0
+    assert s["max_accuracy"] == 0.0 and s["final_accuracy"] == 0.0
+    assert s["mean_round_duration_h"] == 0.0
+    assert s["total_days"] == 0.0
+    assert s["relay_hops"] == 0 and s["comms_mb"] == 0.0
