@@ -1,0 +1,156 @@
+"""Mega-constellation comms scale benchmark (1,000+ satellites, 1 day).
+
+The paper's grids stop at 100 satellites (c10s10); the dense-LEO line of
+work this repo tracks targets Starlink-scale fleets. This suite pins the
+comms stack at that scale: build a c30s30-class Walker constellation
+(default c32s32 = 1,024 satellites), compute its ground + pruned-ISL
+contact windows over one day, price the plan twice (constant telemetry
+and the slant-range `LinkBudget`, via the geometry-cached `rerate`), and
+route EVERY satellite's parameter return in one `batch_earliest_arrival`
+call per pricing — all of it array-shaped, with a single-digit-seconds
+wall target on CI hardware.
+
+Rows are *simulated* quantities (window counts, reachability, arrival
+times) — orbital arithmetic, reproducible across machines — so they can
+join BENCH_sweep.json and gate regressions; the wall clock lands in the
+suite's ``wall_s``/``wall_breakdown`` telemetry instead (informational,
+machine-dependent).
+
+  python -m benchmarks.bench_scale [--full] [--trace OUT.json]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import numpy as np
+
+if __package__ in (None, ""):       # `python benchmarks/bench_scale.py ...`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import emit, timer                    # noqa: E402
+
+from repro.comms import (                                    # noqa: E402
+    ConstantRate,
+    LinkBudget,
+    build_contact_plan,
+    compute_isl_windows,
+)
+from repro.comms.isl import ISLTopology                      # noqa: E402
+from repro.comms.routing import batch_earliest_arrival       # noqa: E402
+from repro.core.timing import HardwareModel                  # noqa: E402
+from repro.obs import span                                   # noqa: E402
+from repro.orbits import (                                   # noqa: E402
+    WalkerStar,
+    compute_access_windows,
+    station_subnetwork,
+)
+
+HORIZON_S = 86400.0          # one day
+SEAM_K = 2                   # nearest-slot seam candidates per seam sat
+MAX_HOPS = 3
+# c30s30-class scenarios: (planes, sats_per_plane). The default is the
+# 1,024-satellite headline; --full adds the literal c30s30 (900 sats)
+# as a second datapoint on the scaling curve.
+SCENARIOS = ((32, 32),)
+FULL_SCENARIOS = ((32, 32), (30, 30))
+
+
+def _route_rows(tag: str, plan, n_sats: int, model_bytes: float):
+    """Route every satellite at t=0 and reduce to deterministic rows."""
+    routes = batch_earliest_arrival(plan, list(range(n_sats)), 0.0,
+                                    model_bytes, max_hops=MAX_HOPS)
+    reached = [r for r in routes if r is not None]
+    rows = [(f"{tag}/reach_frac",
+             round(len(reached) / n_sats, 4), f"of={n_sats}")]
+    if not reached:
+        return rows
+    arrivals = np.array([r.arrival_s for r in reached])
+    hops = np.array([r.isl_hops for r in reached])
+    rows += [
+        (f"{tag}/relay_frac", round(float((hops > 0).mean()), 4),
+         f"max_hops={MAX_HOPS}"),
+        (f"{tag}/mean_hops", round(float(hops.mean()), 4), ""),
+        (f"{tag}/mean_arrival_h", round(float(arrivals.mean()) / 3600, 4),
+         ""),
+        (f"{tag}/p95_arrival_h",
+         round(float(np.quantile(arrivals, 0.95)) / 3600, 4), ""),
+    ]
+    return rows
+
+
+def run(quick: bool = True, n_stations: int = 13):
+    """One row set per scenario x link model. No disk caches: the point
+    is the cold wall of the array-shaped build itself, so every run
+    recomputes windows, tables, and routes from orbital elements."""
+    rows = []
+    model_bytes = HardwareModel().model_bytes
+    for planes, spp in (SCENARIOS if quick else FULL_SCENARIOS):
+        c = WalkerStar(planes, spp)
+        name = f"scale/c{planes}s{spp}"
+        stations = station_subnetwork(n_stations)
+        with timer() as t_build:
+            with span("bench.plan_build", kind="access_windows",
+                      scenario=name, sats=c.n_sats):
+                aw = compute_access_windows(c, stations,
+                                            horizon_s=HORIZON_S)
+            topo = ISLTopology.walker_grid(c, cross_plane=True,
+                                           seam_k=SEAM_K)
+            with span("bench.plan_build", kind="isl_windows",
+                      scenario=name, edges=topo.n_edges):
+                iw = compute_isl_windows(c, topo, horizon_s=HORIZON_S)
+            with span("bench.plan_build", kind="contact_plan",
+                      scenario=name):
+                plan = build_contact_plan(aw, iw, ConstantRate(),
+                                          constellation=c,
+                                          stations=stations,
+                                          cache_geometry=True)
+        with timer() as t_rerate:
+            plan_b = plan.rerate(LinkBudget())
+        n_isl_w = sum(len(s) for s, _ in iw.per_edge)
+        n_gnd_w = sum(len(s) for s, _ in aw.per_sat)
+        rows += [
+            (f"{name}/sats", c.n_sats, f"build_s={t_build.s:.2f}"),
+            (f"{name}/isl_edges", topo.n_edges, f"seam_k={SEAM_K}"),
+            (f"{name}/isl_windows", n_isl_w, ""),
+            (f"{name}/ground_windows", n_gnd_w,
+             f"rerate_s={t_rerate.s:.2f}"),
+        ]
+        for tag, pl in ((f"{name}/const", plan), (f"{name}/budget",
+                                                  plan_b)):
+            with timer() as t_route:
+                out = _route_rows(tag, pl, c.n_sats, model_bytes)
+            out[0] = (out[0][0], out[0][1],
+                      out[0][2] + f";route_s={t_route.s:.2f}")
+            rows += out
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="add the literal c30s30 (900-sat) scenario")
+    ap.add_argument("--stations", type=int, default=13)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="enable repro.obs tracing and write a Chrome/"
+                         "Perfetto trace.json of the run")
+    args = ap.parse_args(argv)
+    if args.trace:
+        from repro import obs
+        obs.enable()
+    with timer() as t:
+        emit(run(quick=not args.full, n_stations=args.stations))
+    print(f"# bench_scale wall: {t.s:.2f}s")
+    if args.trace:
+        from repro import obs
+        summary = obs.metrics_summary()
+        obs.write_chrome_trace(args.trace)
+        for name, value in sorted(summary["counters"].items()):
+            print(f"# obs counter {name}={value}")
+        print(f"# obs wrote trace to {args.trace}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,12 @@ comms pricing, or event-loop edits), not noise.
 clobbering suites written by `benchmarks.run` (whose sweep768 /
 round_duration rows are also compared when both sides carry them).
 
+The mega-constellation `scale` suite (benchmarks.bench_scale: a
+1,024-satellite 1-day plan built, rated twice, and batch-routed for
+every satellite) runs alongside the trend grid. Its rows are
+deterministic orbital quantities too, but pinned in *both* directions:
+a reachability drop is as much a comms regression as a later arrival.
+
 The trend suite also records `wall_s` and a per-phase `wall_breakdown`
 (from `repro.obs` tracing). These are *informational only* — wall clocks
 are machine-dependent, so the gate prints their trend vs the committed
@@ -31,6 +37,12 @@ import time
 
 # Suites whose row values are durations (hours): higher is a regression.
 DURATION_SUITES = ("sweep_ci", "sweep768", "round_duration")
+# Suites whose rows are deterministic simulated quantities pinned in BOTH
+# directions (window counts, reachability, arrival times of the
+# mega-constellation scale bench): any drift is a behaviour change in
+# the comms stack, not noise — lower reachability is as much a
+# regression as a later arrival.
+DRIFT_SUITES = ("scale",)
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "..",
                                 "BENCH_sweep.json")
 # CI trend-grid knobs — must stay identical between the committed
@@ -67,12 +79,25 @@ def compare(baseline: dict, current: dict, threshold: float = 0.10,
                 regressions.append(
                     f"{suite}/{name}: {base} -> {val} h "
                     f"(+{(val / base - 1.0) * 100.0:.1f}%)")
+    for suite in DRIFT_SUITES:
+        b = baseline.get("suites", {}).get(suite) or {}
+        c = current.get("suites", {}).get(suite) or {}
+        bmap = {r[0]: r[1] for r in b.get("rows", [])}
+        for row in c.get("rows", []):
+            name, val = row[0], row[1]
+            base = bmap.get(name)
+            if not isinstance(base, (int, float)) or \
+                    not isinstance(val, (int, float)):
+                continue
+            if abs(val - base) > max(atol, threshold * abs(base)):
+                regressions.append(
+                    f"{suite}/{name}: {base} -> {val} (drift)")
     return regressions
 
 
 def overlap_count(baseline: dict, current: dict) -> int:
     n = 0
-    for suite in DURATION_SUITES:
+    for suite in DURATION_SUITES + DRIFT_SUITES:
         b = {r[0] for r in (baseline.get("suites", {}).get(suite) or {})
              .get("rows", [])}
         c = {r[0] for r in (current.get("suites", {}).get(suite) or {})
@@ -133,6 +158,36 @@ def generate_trend_suite() -> dict:
     }}}
 
 
+def generate_scale_suite() -> dict:
+    """Run the mega-constellation scale bench (1,024-sat, 1-day plan +
+    all-satellite batch routing) and package it as a `scale` suite. Its
+    rows are deterministic orbital quantities gated in both directions
+    (see DRIFT_SUITES); wall telemetry rides along informationally."""
+    from benchmarks import bench_scale
+
+    from repro import obs
+
+    fresh = not obs.enabled()
+    if fresh:
+        obs.enable()
+    spans0 = {k: v["total_s"]
+              for k, v in obs.metrics_summary().get("spans", {}).items()}
+    t0 = time.perf_counter()
+    rows = bench_scale.run(quick=True)
+    wall_s = time.perf_counter() - t0
+    breakdown = {}
+    for name, s in obs.metrics_summary().get("spans", {}).items():
+        d = s["total_s"] - spans0.get(name, 0.0)
+        if d >= 0.005:
+            breakdown[name] = round(d, 3)
+    if fresh:
+        obs.disable()
+    return {"wall_s": round(wall_s, 2),
+            "wall_breakdown": dict(sorted(breakdown.items(),
+                                          key=lambda kv: -kv[1])),
+            "rows": [list(r) for r in rows]}
+
+
 def wall_trend(baseline: dict, current: dict) -> list[str]:
     """Informational wall-clock trend lines (never gate CI: wall seconds
     are machine-dependent, unlike the simulated duration rows)."""
@@ -166,6 +221,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     current = generate_trend_suite()
+    current["suites"]["scale"] = generate_scale_suite()
     path = args.baseline
 
     if args.write_baseline:
@@ -176,6 +232,7 @@ def main(argv=None) -> int:
         merged.setdefault("schema", 1)
         merged.setdefault("suites", {})
         merged["suites"]["sweep_ci"] = current["suites"]["sweep_ci"]
+        merged["suites"]["scale"] = current["suites"]["scale"]
         with open(path, "w") as f:
             json.dump(merged, f, indent=1)
         print(f"# wrote trend baseline to {os.path.normpath(path)}")

@@ -15,8 +15,11 @@ usefully-populated trace:
     as produced by a push/pop tracer);
   * the required span names are present (default: the acceptance chain
     ``bench.plan_build`` -> ``sim.round`` -> ``sim.eval``);
-  * at least one cache counter ("C" event or summary counter ending in
-    ``.hit``/``.miss``) was recorded.
+  * the required counters are present — by default at least one cache
+    counter ("C" event or summary counter ending in ``.hit``/``.miss``);
+    ``--require-counters`` swaps in an explicit name list instead (the
+    mega-constellation scale smoke pins ``comms.batch_routes``, the
+    one-span-per-batch routing contract, this way).
 
 Exit code 0 on success, 1 with a ``# trace FAIL ...`` report otherwise.
 """
@@ -31,8 +34,14 @@ REQUIRED_SPANS = "bench.plan_build,sim.round,sim.eval"
 _COMMON_KEYS = ("name", "ph", "pid", "tid")
 
 
-def validate(doc: dict, required_spans: list[str]) -> list[str]:
-    """Return a list of problems (empty = valid trace)."""
+def validate(doc: dict, required_spans: list[str],
+             required_counters: list[str] | None = None) -> list[str]:
+    """Return a list of problems (empty = valid trace).
+
+    `required_counters=None` keeps the default cache-telemetry check (at
+    least one `*.hit`/`*.miss` counter); a list requires those counter
+    names verbatim instead.
+    """
     problems: list[str] = []
     events = doc.get("traceEvents")
     if not isinstance(events, list) or not events:
@@ -92,11 +101,18 @@ def validate(doc: dict, required_spans: list[str]) -> list[str]:
 
     summary_counters = (doc.get("metadata", {}).get("summary", {})
                         .get("counters", {}))
-    cache_hits = [n for n in (counter_names | set(summary_counters))
-                  if n.endswith(".hit") or n.endswith(".miss")]
-    if not cache_hits:
-        problems.append("no cache hit/miss counters recorded "
-                        f"(counters: {sorted(counter_names)})")
+    all_counters = counter_names | set(summary_counters)
+    if required_counters is None:
+        cache_hits = [n for n in all_counters
+                      if n.endswith(".hit") or n.endswith(".miss")]
+        if not cache_hits:
+            problems.append("no cache hit/miss counters recorded "
+                            f"(counters: {sorted(counter_names)})")
+    else:
+        for name in required_counters:
+            if name and name not in all_counters:
+                problems.append(f"required counter {name!r} never recorded "
+                                f"(saw: {sorted(all_counters)})")
     return problems
 
 
@@ -106,6 +122,10 @@ def main(argv=None) -> int:
     ap.add_argument("--require", default=REQUIRED_SPANS,
                     help="comma-separated span names that must appear "
                          f"(default: {REQUIRED_SPANS})")
+    ap.add_argument("--require-counters", default=None,
+                    help="comma-separated counter names that must appear "
+                         "(default: at least one *.hit/*.miss cache "
+                         "counter)")
     args = ap.parse_args(argv)
     try:
         with open(args.trace) as f:
@@ -113,7 +133,10 @@ def main(argv=None) -> int:
     except (OSError, json.JSONDecodeError) as e:
         print(f"# trace FAIL: cannot read {args.trace}: {e}")
         return 1
-    problems = validate(doc, [s.strip() for s in args.require.split(",")])
+    problems = validate(doc, [s.strip() for s in args.require.split(",")],
+                        None if args.require_counters is None else
+                        [s.strip()
+                         for s in args.require_counters.split(",")])
     if problems:
         print(f"# trace FAIL: {args.trace}")
         for p in problems:

@@ -33,6 +33,7 @@ from benchmarks import (
     bench_kernels,
     bench_roofline,
     bench_round_duration,
+    bench_scale,
     bench_speedup,
     bench_sweep,
 )
@@ -61,6 +62,7 @@ SUITES = {
     "sweep768": lambda full, ex, lm, wl: bench_sweep.run(
         quick=not full, train=ex is not None, execution=ex,
         link_model=lm, workload=wl),
+    "scale": lambda full, ex, lm, wl: bench_scale.run(quick=not full),
     "roofline": lambda full, ex, lm, wl: bench_roofline.run(),
 }
 

@@ -55,7 +55,11 @@ from repro.comms.links import (
     slant_range_m,
 )
 from repro.orbits.access import AccessWindows
-from repro.orbits.propagation import eci_positions_np, gs_eci_positions_np
+from repro.orbits.propagation import (
+    eci_positions_at_np,
+    eci_positions_np,
+    gs_eci_positions_np,
+)
 from repro.orbits.stations import station_latlon
 
 Edge = tuple  # ("gs", k) | ("isl", i, j) with i < j
@@ -80,6 +84,43 @@ class ContactWindow:
     def volume_bytes(self) -> float:
         """Bytes transferable if the whole window is used at `rate_bps`."""
         return self.duration_s * self.rate_bps / 8.0
+
+
+def _profile_tx_end_batch(times: np.ndarray, rates: np.ndarray,
+                          t0: np.ndarray, n_bits: float) -> np.ndarray:
+    """Vectorized `_profile_tx_end` over a batch of windows.
+
+    `times`/`rates` are (B, S) per-lane profile samples, `t0` the (B,)
+    transfer starts. Same segment walk, same float64 arithmetic — each
+    lane's result is bitwise-identical to the scalar loop — but the
+    segment loop runs S-1 vectorized passes instead of B Python loops.
+    """
+    r = np.maximum(np.asarray(rates, float), MIN_RATE_BPS)
+    remaining = np.full(t0.shape, float(n_bits))
+    t = np.asarray(t0, float).copy()
+    out = np.zeros(t0.shape)
+    done = np.zeros(t0.shape, bool)
+    for i in range(times.shape[1] - 1):
+        ta, tb = times[:, i], times[:, i + 1]
+        skip = (tb <= t) | (tb <= ta)
+        a = np.maximum(t, ta)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            m = (r[:, i + 1] - r[:, i]) / (tb - ta)
+            ra = r[:, i] + m * (a - ta)
+            seg_bits = 0.5 * (ra + r[:, i + 1]) * (tb - a)
+            fin = ~done & ~skip & (seg_bits >= remaining)
+            flat = np.abs(m) < 1e-12
+            end_flat = a + remaining / np.maximum(ra, MIN_RATE_BPS)
+            disc = ra * ra + 2.0 * m * remaining
+            end_slope = a + (np.sqrt(np.maximum(disc, 0.0)) - ra) / m
+        out = np.where(fin & flat, end_flat,
+                       np.where(fin & ~flat, end_slope, out))
+        done |= fin
+        cont = ~done & ~skip
+        remaining = np.where(cont, remaining - seg_bits, remaining)
+        t = np.where(cont, tb, t)
+    tail = t + remaining / np.maximum(r[:, -1], MIN_RATE_BPS)
+    return np.where(done, out, tail)
 
 
 def _profile_tx_end(times: np.ndarray, rates: np.ndarray, t0: float,
@@ -166,6 +207,210 @@ class _EdgeWindows:
         return tx_start + n_bits / max(float(self.rates[i]), MIN_RATE_BPS)
 
 
+@dataclasses.dataclass
+class WindowTable:
+    """Padded rectangular window arrays for a whole edge set.
+
+    Per-edge window lists are ragged; queries over them are per-edge
+    Python. This table pads every edge's start-sorted windows to the
+    edge-set maximum (`starts`/`ends`/`rates` all (E, W), padding +inf)
+    so window lookup and transfer pricing become batched array ops over
+    arbitrary (edge, time) lane sets — the shape the batch router and
+    the mega-constellation benches need. `counts` (E,) bounds the live
+    region of each row; `cummax_ends` carries the same running-max-of-
+    ends trick as `_EdgeWindows.first_live`, padded with +inf so padding
+    never counts as closed. `rate_profile` (E, W, S), when present,
+    carries the piecewise pass pricing of budget-priced ground windows.
+
+    Every query reproduces its `_EdgeWindows` scalar twin bitwise: same
+    window-advance rules, same float64 transfer arithmetic.
+    """
+
+    starts: np.ndarray
+    ends: np.ndarray
+    rates: np.ndarray
+    counts: np.ndarray
+    cummax_ends: np.ndarray
+    rate_profile: np.ndarray | None = None
+    _profile_times: np.ndarray | None = None
+
+    @classmethod
+    def from_edges(cls, edges: list[_EdgeWindows]) -> "WindowTable":
+        E = len(edges)
+        W = max((len(e) for e in edges), default=0)
+        starts = np.full((E, W), np.inf)
+        ends = np.full((E, W), np.inf)
+        rates = np.full((E, W), MIN_RATE_BPS)
+        cummax = np.full((E, W), np.inf)
+        counts = np.zeros(E, np.int64)
+        prof_w = max((e.rate_profile.shape[1] for e in edges
+                      if e.rate_profile is not None), default=0)
+        prof = np.zeros((E, W, prof_w)) if prof_w else None
+        prof_t = np.zeros((E, W, prof_w)) if prof_w else None
+        for i, e in enumerate(edges):
+            n = len(e)
+            counts[i] = n
+            if not n:
+                continue
+            starts[i, :n] = e.starts
+            ends[i, :n] = e.ends
+            rates[i, :n] = e.rates
+            cummax[i, :n] = e.cummax_ends
+            if prof is not None and e.rate_profile is not None:
+                prof[i, :n] = e.rate_profile
+                # Per-window profile instants: the same linspace the
+                # scalar `tx_end` rebuilds on every call.
+                prof_t[i, :n] = np.linspace(e.starts, e.ends, prof_w,
+                                            axis=-1)
+        return cls(starts=starts, ends=ends, rates=rates, counts=counts,
+                   cummax_ends=cummax, rate_profile=prof,
+                   _profile_times=prof_t)
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.counts)
+
+    def first_live(self, rows: np.ndarray, t: np.ndarray) -> np.ndarray:
+        """Batched `_EdgeWindows.first_live`: for each (edge-row, time)
+        lane, the index of the first start-sorted window with end > t.
+
+        Vectorized binary search over the lane axis: each `cummax_ends`
+        row is non-decreasing (running max, +inf padding), so the count
+        of entries <= t is a bisect — log2(W) gathers of B elements
+        instead of materializing the full (B, W) gather, which dominates
+        the router's wall at mega-constellation lane counts.
+        """
+        W = self.cummax_ends.shape[1]
+        B = len(rows)
+        lo = np.zeros(B, np.int64)
+        if W == 0 or B == 0:
+            return lo
+        hi = np.full(B, W, np.int64)
+        live = np.ones(B, bool)
+        while live.any():
+            mid = (lo + hi) >> 1
+            # Dead lanes can carry mid == W; clamp the gather (their
+            # `below` is masked off, so the fetched value is unused).
+            below = live & (self.cummax_ends[rows,
+                                             np.minimum(mid, W - 1)] <= t)
+            lo = np.where(below, mid + 1, lo)
+            hi = np.where(live & ~below, mid, hi)
+            live = lo < hi
+        return lo
+
+    def _tx_end(self, rows, wi, tx_start, n_bits):
+        if self.rate_profile is not None:
+            has = self._profile_times[rows, wi, -1] > 0
+            flat = tx_start + n_bits / np.maximum(self.rates[rows, wi],
+                                                  MIN_RATE_BPS)
+            if not has.any():
+                return flat
+            prof = _profile_tx_end_batch(self._profile_times[rows, wi],
+                                         self.rate_profile[rows, wi],
+                                         tx_start, n_bits)
+            return np.where(has, prof, flat)
+        return tx_start + n_bits / np.maximum(self.rates[rows, wi],
+                                              MIN_RATE_BPS)
+
+    def ground_upload(self, rows: np.ndarray, t: np.ndarray, n_bytes: float
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched `ContactPlan.next_ground_upload` over (row, time) lanes.
+
+        Returns (tx_start, tx_end, ok); lanes without any usable window
+        report ok=False (tx arrays undefined there). Mirrors the scalar
+        walk exactly: skip closed overlaps, stop once a window cannot
+        complete earlier than the current best, keep the earliest-
+        completion candidate.
+        """
+        rows = np.asarray(rows)
+        t = np.asarray(t, float)
+        B = rows.shape[0]
+        n_bits = n_bytes * 8
+        i = self.first_live(rows, t)
+        best_s = np.zeros(B)
+        best_e = np.full(B, np.inf)
+        ok = np.zeros(B, bool)
+        done = np.zeros(B, bool)
+        counts = self.counts[rows]
+        while True:
+            act = ~done & (i < counts)
+            if not act.any():
+                break
+            wi = np.where(act, i, 0)
+            en = self.ends[rows, wi]
+            st = self.starts[rows, wi]
+            closed = en <= t
+            stop = act & ~closed & ok & (st >= best_e)
+            done |= stop
+            live = act & ~closed & ~stop
+            tx_s = np.maximum(st, t)
+            tx_e = self._tx_end(rows, wi, tx_s, n_bits)
+            better = live & (~ok | (tx_e < best_e))
+            best_s = np.where(better, tx_s, best_s)
+            best_e = np.where(better, tx_e, best_e)
+            ok |= live
+            i = np.where(act & ~stop, i + 1, i)
+        return best_s, best_e, ok
+
+    def transfer(self, rows: np.ndarray, t: np.ndarray, n_bytes: float
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched `ContactPlan.next_isl_transfer` over (row, time) lanes.
+
+        Returns (start, end, ok): the earliest window at-or-after t in
+        which the whole `n_bytes` transfer fits, ok=False when none does.
+        """
+        rows = np.asarray(rows)
+        t = np.asarray(t, float)
+        B = rows.shape[0]
+        n_bits = n_bytes * 8
+        w = self.first_live(rows, t)
+        s_out = np.zeros(B)
+        e_out = np.full(B, np.inf)
+        ok = np.zeros(B, bool)
+        counts = self.counts[rows]
+        while True:
+            act = ~ok & (w < counts)
+            if not act.any():
+                break
+            wi = np.where(act, w, 0)
+            en = self.ends[rows, wi]
+            closed = en <= t
+            s = np.maximum(self.starts[rows, wi], t)
+            e = self._tx_end(rows, wi, s, n_bits)
+            fit = act & ~closed & (e <= en)
+            s_out = np.where(fit, s, s_out)
+            e_out = np.where(fit, e, e_out)
+            ok |= fit
+            w = np.where(act & ~fit, w + 1, w)
+        return s_out, e_out, ok
+
+
+@dataclasses.dataclass
+class PlanTables:
+    """Array-shaped view of one `ContactPlan`: the ground/ISL window
+    tables plus the directed ISL adjacency in two orders — (dst, src)
+    sorted with segment boundaries per dst (`seg_*`, for scatter-min
+    reductions) and a per-source CSR (`out_order`/`out_starts`, for
+    expanding only the *reachable* labels of a relax level into their
+    out-edges: the lane set the batch router prices stays proportional
+    to the frontier, not S x D)."""
+
+    ground: WindowTable
+    isl: WindowTable
+    edge_index: dict[tuple[int, int], int]
+    adj_src: np.ndarray      # (D,) directed edge sources
+    adj_dst: np.ndarray      # (D,) directed edge destinations
+    adj_edge: np.ndarray     # (D,) undirected edge row in `isl`
+    seg_starts: np.ndarray   # (V,) reduceat boundaries into the D axis
+    seg_dst: np.ndarray      # (V,) destination sat per segment
+    out_order: np.ndarray    # (D,) adj permutation sorted by (src, dst)
+    out_starts: np.ndarray   # (n_sats + 1,) CSR bounds into out_order
+
+    @property
+    def n_directed(self) -> int:
+        return len(self.adj_src)
+
+
 def _priced_windows(starts: np.ndarray, ends: np.ndarray, link: LinkModel,
                     kind: str, mid_range_m: np.ndarray | None = None,
                     range_profile: np.ndarray | None = None) -> _EdgeWindows:
@@ -193,6 +438,57 @@ def _priced_windows(starts: np.ndarray, ends: np.ndarray, link: LinkModel,
                         rate_profile=rate_profile)
 
 
+def _priced_windows_batch(
+    wins: list[tuple], link: LinkModel, kind: str
+) -> list[_EdgeWindows]:
+    """Price a whole edge set with one vectorized `link.rate_bps` call.
+
+    `wins` is a list of `(starts, ends, mid_range_m, range_profile)`
+    tuples, one per edge. Link pricing is elementwise, so evaluating it
+    on the concatenated midpoint / profile arrays and splitting the
+    result back per edge is bitwise-identical to E separate
+    `_priced_windows` calls — it just replaces E Python-level pricing
+    calls (the per-edge cost that dominates `rerate` on 1,000-sat plans)
+    with one array op over every window at once.
+    """
+    if link.geometry_free:
+        return [_priced_windows(s, e, link, kind, mid_range_m=m,
+                                range_profile=p)
+                for s, e, m, p in wins]
+    for s, _e, m, _p in wins:
+        if len(s) and m is None:
+            raise ValueError(
+                f"no cached geometry on {kind} windows: rebuild with "
+                "build_contact_plan(constellation=..., stations=..., "
+                "cache_geometry=True) before re-rating with a "
+                "range-dependent LinkBudget")
+    mid_parts = [np.asarray(m, float).reshape(-1)
+                 for s, _e, m, _p in wins if len(s)]
+    if mid_parts:
+        rates_flat = np.asarray(
+            link.rate_bps(np.concatenate(mid_parts)), float).reshape(-1)
+        cuts = np.cumsum([len(a) for a in mid_parts])[:-1]
+        rate_chunks = iter(np.split(rates_flat, cuts))
+    else:
+        rate_chunks = iter(())
+    prof_parts = [np.asarray(p, float) for _s, _e, _m, p in wins
+                  if p is not None]
+    if prof_parts:
+        prof_flat = np.asarray(
+            link.rate_bps(np.concatenate(prof_parts, axis=0)), float)
+        pcuts = np.cumsum([len(p) for p in prof_parts])[:-1]
+        prof_chunks = iter(np.split(prof_flat, pcuts, axis=0))
+    else:
+        prof_chunks = iter(())
+    out = []
+    for s, e, m, p in wins:
+        rates = next(rate_chunks) if len(s) else np.empty(0)
+        rp = next(prof_chunks) if p is not None else None
+        out.append(_EdgeWindows(s, e, rates, mid_range_m=m,
+                                range_profile=p, rate_profile=rp))
+    return out
+
+
 @dataclasses.dataclass
 class ContactPlan:
     """Queryable comms timeline for one (constellation, network) scenario."""
@@ -202,6 +498,48 @@ class ContactPlan:
     isl: dict[tuple[int, int], _EdgeWindows]         # key (i, j), i < j
     neighbors: dict[int, list[int]]
     horizon_s: float
+    _tables: "PlanTables | None" = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    # ------------------------------------------------------------ tables --
+    def tables(self) -> PlanTables:
+        """Array-shaped view of this plan (built lazily, cached).
+
+        The batch router and scale benchmarks query the padded
+        `WindowTable`s here instead of the per-edge Python lists; the
+        directed adjacency arrives pre-sorted by destination so
+        relaxation scatter-mins are one `np.minimum.reduceat` per sweep.
+        """
+        if self._tables is None:
+            with span("comms.window_tables", sats=self.n_sats,
+                      isl_edges=len(self.isl)):
+                ekeys = sorted(self.isl)
+                edge_index = {e: r for r, e in enumerate(ekeys)}
+                erow = np.arange(len(ekeys), dtype=np.int64)
+                src = np.fromiter((e[0] for e in ekeys), np.int64,
+                                  len(ekeys))
+                dst = np.fromiter((e[1] for e in ekeys), np.int64,
+                                  len(ekeys))
+                adj_src = np.concatenate([src, dst])
+                adj_dst = np.concatenate([dst, src])
+                adj_edge = np.concatenate([erow, erow])
+                order = np.lexsort((adj_src, adj_dst))
+                adj_src, adj_dst, adj_edge = (adj_src[order],
+                                              adj_dst[order],
+                                              adj_edge[order])
+                seg_dst, seg_starts = np.unique(adj_dst, return_index=True)
+                out_order = np.lexsort((adj_dst, adj_src))
+                out_starts = np.searchsorted(adj_src[out_order],
+                                             np.arange(self.n_sats + 1))
+                self._tables = PlanTables(
+                    ground=WindowTable.from_edges(self.ground),
+                    isl=WindowTable.from_edges(
+                        [self.isl[e] for e in ekeys]),
+                    edge_index=edge_index,
+                    adj_src=adj_src, adj_dst=adj_dst, adj_edge=adj_edge,
+                    seg_starts=seg_starts, seg_dst=seg_dst,
+                    out_order=out_order, out_starts=out_starts)
+        return self._tables
 
     # ------------------------------------------------------------- query --
     def _edge_windows(self, edge: Edge) -> _EdgeWindows:
@@ -311,15 +649,16 @@ class ContactPlan:
                 if link is not None and not link.geometry_free:
                     count("comms.geometry_cache.hit")
             ground = (self.ground if ground_link is None else
-                      [_priced_windows(ew.starts, ew.ends, ground_link,
-                                       "ground", mid_range_m=ew.mid_range_m,
-                                       range_profile=ew.range_profile)
-                       for ew in self.ground])
-            isl = (self.isl if isl_link is None else
-                   {e: _priced_windows(ew.starts, ew.ends, isl_link, "ISL",
-                                       mid_range_m=ew.mid_range_m,
-                                       range_profile=ew.range_profile)
-                    for e, ew in self.isl.items()})
+                      _priced_windows_batch(
+                          [(ew.starts, ew.ends, ew.mid_range_m,
+                            ew.range_profile) for ew in self.ground],
+                          ground_link, "ground"))
+            if isl_link is None:
+                isl = self.isl
+            else:
+                isl = dict(zip(self.isl, _priced_windows_batch(
+                    [(ew.starts, ew.ends, ew.mid_range_m, ew.range_profile)
+                     for ew in self.isl.values()], isl_link, "ISL")))
             return ContactPlan(n_sats=self.n_sats, ground=ground, isl=isl,
                                neighbors=self.neighbors,
                                horizon_s=self.horizon_s)
@@ -420,10 +759,10 @@ def build_contact_plan(
         elements = (constellation.elements()
                     if need_ground_geom or need_isl_geom else None)
 
-        ground: list[_EdgeWindows] = []
         if need_ground_geom:
             lat, lon = station_latlon(stations)
         with span("comms.ground_windows", sats=K):
+            graw: list[tuple] = []
             for k in range(K):
                 s_arr, e_arr = aw.per_sat[k]
                 starts = np.asarray(s_arr, float)
@@ -433,28 +772,42 @@ def build_contact_plan(
                     mid, prof = _ground_geometry(k, starts, ends, aw,
                                                  elements, lat, lon,
                                                  range_samples)
-                ground.append(_priced_windows(starts, ends, ground_link,
-                                              "ground", mid_range_m=mid,
-                                              range_profile=prof))
+                graw.append((starts, ends, mid, prof))
+            ground = _priced_windows_batch(graw, ground_link, "ground")
 
         isl: dict[tuple[int, int], _EdgeWindows] = {}
         neighbors: dict[int, list[int]] = {}
         if isl_windows is not None and isl_windows.n_edges:
             with span("comms.isl_windows", edges=isl_windows.n_edges):
+                keys: list[tuple[int, int]] = []
+                iraw: list[list] = []
                 for (i, j), (s_arr, e_arr) in zip(isl_windows.edges,
                                                   isl_windows.per_edge):
                     if len(s_arr) == 0:
                         continue
-                    starts = np.asarray(s_arr, float)
-                    ends = np.asarray(e_arr, float)
-                    mid = None
-                    if need_isl_geom:
-                        mids = (starts + ends) / 2.0
-                        pos = eci_positions_np(
-                            _elements_of(elements, [i, j]), mids)  # (2, M, 3)
-                        mid = slant_range_m(pos[0], pos[1])
-                    isl[(i, j)] = _priced_windows(starts, ends, isl_link,
-                                                  "ISL", mid_range_m=mid)
+                    keys.append((i, j))
+                    iraw.append([np.asarray(s_arr, float),
+                                 np.asarray(e_arr, float), None, None])
+                if need_isl_geom and keys:
+                    # All edges' midpoint ranges from ONE propagation
+                    # call: gather-shaped (endpoint, instant) pairs
+                    # instead of a (2, M, 3) grid per edge.
+                    counts = np.fromiter((len(w[0]) for w in iraw),
+                                         np.int64, len(iraw))
+                    mids = np.concatenate([(w[0] + w[1]) / 2.0
+                                           for w in iraw])
+                    ii = np.repeat([i for i, _ in keys], counts)
+                    jj = np.repeat([j for _, j in keys], counts)
+                    rng = slant_range_m(
+                        eci_positions_at_np(elements, ii, mids),
+                        eci_positions_at_np(elements, jj, mids))
+                    for w, chunk in zip(iraw, np.split(
+                            rng, np.cumsum(counts)[:-1])):
+                        w[2] = chunk
+                priced = _priced_windows_batch(
+                    [tuple(w) for w in iraw], isl_link, "ISL")
+                for (i, j), ew in zip(keys, priced):
+                    isl[(i, j)] = ew
                     neighbors.setdefault(i, []).append(j)
                     neighbors.setdefault(j, []).append(i)
 

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.obs import span
-from repro.orbits.access import _merge_intervals
+from repro.orbits.access import extract_intervals, merge_chunked_intervals
 from repro.orbits.constants import DEFAULT_DT_S, DEFAULT_HORIZON_S, R_EARTH
 from repro.orbits.propagation import eci_positions
 from repro.orbits.walker import WalkerStar
@@ -57,21 +57,57 @@ class ISLTopology:
     def walker_star(cls, c: WalkerStar,
                     cross_plane: bool = False) -> "ISLTopology":
         """Intra-plane ring + optional same-slot cross-plane links."""
+        return cls.walker_grid(c, cross_plane=cross_plane, seam_k=0)
+
+    @classmethod
+    def walker_grid(cls, c: WalkerStar, cross_plane: bool = False,
+                    seam_k: int = 0) -> "ISLTopology":
+        """Pruned ISL candidate set from plane/slot adjacency.
+
+        Instead of materializing arbitrary (worst case all-pairs) edge
+        lists, candidates come from the Walker grid structure — the only
+        terminal pairings a real mega-constellation wires up:
+
+          * ring:        fore/aft neighbours within each plane;
+          * cross_plane: same-slot satellites of RAAN-adjacent planes
+                         (the +grid pattern);
+          * seam_k:      the counter-rotating seam between the first and
+                         last plane carries no permanent link, but each
+                         seam satellite may carry candidates to its
+                         `seam_k` nearest slots (by initial anomaly) of
+                         the opposite seam plane — the window search
+                         decides which of those ever see each other.
+
+        The candidate count is O(K * (2 + seam_k)) instead of O(K^2), so
+        the (E, T) visibility scan stays linear in fleet size.
+        """
         P, S = c.clusters, c.sats_per_cluster
-        edges: set[tuple[int, int]] = set()
-        for p in range(P):
-            base = p * S
-            for s in range(S):
-                if S >= 2:
-                    a, b = base + s, base + (s + 1) % S
-                    if a != b:
-                        edges.add((min(a, b), max(a, b)))
-        if cross_plane:
-            for p in range(P - 1):          # no seam link in a Star pattern
-                for s in range(S):
-                    a, b = p * S + s, (p + 1) * S + s
-                    edges.add((min(a, b), max(a, b)))
-        return cls(edges=tuple(sorted(edges)))
+        pairs: list[np.ndarray] = []
+        sats = np.arange(P * S, dtype=np.int64).reshape(P, S)
+        if S >= 2:
+            ring = np.stack([sats, np.roll(sats, -1, axis=1)], axis=-1)
+            pairs.append(ring.reshape(-1, 2))
+        if cross_plane and P >= 2:
+            cross = np.stack([sats[:-1], sats[1:]], axis=-1)
+            pairs.append(cross.reshape(-1, 2))
+        if seam_k > 0 and P >= 2:
+            # Slot phase difference between plane P-1 and plane 0, as a
+            # fraction of a full revolution; nearest-k by angular offset.
+            k = min(int(seam_k), S)
+            phase = np.add.outer(np.arange(S), -np.arange(S)) / S
+            if c.relative_phasing:
+                phase = phase + c.relative_phasing * (P - 1) / S
+            ang = np.abs((phase + 0.5) % 1.0 - 0.5)          # (S_last, S_0)
+            nearest = np.argsort(ang, axis=1, kind="stable")[:, :k]
+            seam = np.stack([np.broadcast_to(sats[-1][:, None], nearest.shape),
+                             sats[0][nearest]], axis=-1)
+            pairs.append(seam.reshape(-1, 2))
+        if not pairs:
+            return cls(edges=())
+        cand = np.concatenate(pairs, axis=0)
+        cand = np.stack([cand.min(axis=1), cand.max(axis=1)], axis=1)
+        cand = np.unique(cand[cand[:, 0] != cand[:, 1]], axis=0)
+        return cls(edges=tuple((int(i), int(j)) for i, j in cand))
 
 
 @functools.partial(jax.jit, static_argnames=())
@@ -136,7 +172,9 @@ def compute_isl_windows(
     max_range_m = jnp.asarray(max_range_km * 1e3)
     n_steps = int(np.ceil(horizon_s / dt_s)) + 1
 
-    raw: list[list[tuple[float, float]]] = [[] for _ in range(E)]
+    trk_chunks: list[np.ndarray] = []
+    rise_chunks: list[np.ndarray] = []
+    fall_chunks: list[np.ndarray] = []
     for c0 in range(0, n_steps, chunk_steps):
         c1 = min(c0 + chunk_steps, n_steps)
         with span("comms.isl_chunk", t0_step=c0, steps=c1 - c0, edges=E):
@@ -144,21 +182,18 @@ def compute_isl_windows(
             vis = np.asarray(isl_visibility_grid(elements, ei, ej,
                                                  jnp.asarray(t),
                                                  max_range_m))
-        # Vectorized edge extraction across all edge tracks (access.py idiom).
-        padded = np.zeros((E, vis.shape[1] + 2), bool)
-        padded[:, 1:-1] = vis
-        flips = padded[:, 1:] != padded[:, :-1]
-        es, ts = np.nonzero(flips)
-        t0 = float(t[0])
-        for e, rise, fall in zip(es[0::2], t0 + ts[0::2] * dt_s,
-                                 t0 + ts[1::2] * dt_s):
-            raw[int(e)].append((float(rise), float(fall)))
+        # Vectorized rise/fall pairing across all edge tracks — the (E, T)
+        # scan stays array-shaped end to end (no per-event Python loop).
+        trk, rises, falls = extract_intervals(vis, float(t[0]), dt_s)
+        trk_chunks.append(trk)
+        rise_chunks.append(rises)
+        fall_chunks.append(falls)
 
-    per_edge: list[tuple[np.ndarray, np.ndarray]] = []
-    for e in range(E):
-        # Merging stitches contacts split at chunk boundaries back together.
-        ivs = _merge_intervals(raw[e])
-        per_edge.append((np.array([s for s, _ in ivs]),
-                         np.array([x for _, x in ivs])))
+    # Stitch contacts split at chunk boundaries back together (vectorized
+    # over all edges at once), then split the flat result per edge.
+    counts, starts, ends = merge_chunked_intervals(
+        trk_chunks, rise_chunks, fall_chunks, E)
+    cuts = np.cumsum(counts)[:-1]
+    per_edge = list(zip(np.split(starts, cuts), np.split(ends, cuts)))
     return ISLWindows(edges=topo.edges, per_edge=per_edge,
                       horizon_s=horizon_s, dt_s=dt_s)

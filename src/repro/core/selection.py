@@ -33,7 +33,11 @@ from typing import Sequence
 import numpy as np
 
 from repro.comms.contact_plan import ContactPlan
-from repro.comms.routing import earliest_arrival
+from repro.comms.routing import batch_earliest_arrival, earliest_arrival
+
+# Sentinel distinguishing "route not precomputed" (fall back to a
+# per-source Dijkstra) from "batch router found no route" (None).
+_UNROUTED = object()
 from repro.core.strategies.base import ClientWorkMode, Strategy
 from repro.core.timing import HardwareModel
 from repro.orbits.access import AccessWindows
@@ -61,7 +65,7 @@ class ClientPlan:
         return self.tx_end - self.rx_start
 
 
-def _plan_for(
+def _plan_prefix(
     k: int,
     t: float,
     aw: AccessWindows,
@@ -69,11 +73,17 @@ def _plan_for(
     hw: HardwareModel,
     local_epochs: int,
     min_epochs: int,
-    use_relay: bool,
     plan: ContactPlan | None = None,
-    max_hops: int = 3,
-) -> ClientPlan | None:
-    """Build the itinerary for one candidate satellite starting at time t."""
+) -> tuple | None:
+    """Download pass + training timing for one candidate — everything an
+    itinerary needs *before* the return path is routed. Returns
+    (rx_start, rx_end, train_start, train_end, epochs, earliest_return),
+    with train_end None for UNTIL_CONTACT (resolved once the departure is
+    known), or None when no download pass exists. Split out of
+    `_plan_for` so selectors can compute every candidate's
+    `earliest_return` first and route the whole round in ONE
+    `batch_earliest_arrival` call.
+    """
     # --- download pass ---------------------------------------------------
     if plan is not None:
         w0 = plan.next_window(("gs", k), t)
@@ -119,6 +129,33 @@ def _plan_for(
             train_start + max(min_epochs, 1) * hw.epoch_time_s, after_pass)
         train_end = None  # resolved once the return window is known
         epochs = 0
+    return rx_start, rx_end, train_start, train_end, epochs, earliest_return
+
+
+def _plan_for(
+    k: int,
+    t: float,
+    aw: AccessWindows,
+    strategy: Strategy,
+    hw: HardwareModel,
+    local_epochs: int,
+    min_epochs: int,
+    use_relay: bool,
+    plan: ContactPlan | None = None,
+    max_hops: int = 3,
+    route=_UNROUTED,
+) -> ClientPlan | None:
+    """Build the itinerary for one candidate satellite starting at time t.
+
+    `route` short-circuits the contact-graph search with a precomputed
+    `Route | None` (from `batch_earliest_arrival`); by default the
+    per-source Dijkstra runs here.
+    """
+    prefix = _plan_prefix(k, t, aw, strategy, hw, local_epochs,
+                          min_epochs, plan=plan)
+    if prefix is None:
+        return None
+    rx_start, rx_end, train_start, train_end, epochs, earliest_return = prefix
 
     # --- choose the return path -----------------------------------------
     relay = -1
@@ -127,8 +164,10 @@ def _plan_for(
     comm_bytes = 2.0 * hw.model_bytes
     if plan is not None:
         # Contact-graph routing: relayed uploads pay ISL transfer + wait.
-        route = earliest_arrival(plan, k, earliest_return, hw.model_bytes,
-                                 max_hops=max_hops if use_relay else 0)
+        if route is _UNROUTED:
+            route = earliest_arrival(plan, k, earliest_return,
+                                     hw.model_bytes,
+                                     max_hops=max_hops if use_relay else 0)
         if route is None:
             return None
         tx_start, tx_end = route.tx_start, route.arrival_s
@@ -193,12 +232,36 @@ class BaseSelector:
         plan: ContactPlan | None = None,
     ) -> list[ClientPlan]:
         plans = []
-        for k in idle:
-            p = _plan_for(int(k), t, aw, strategy, hw, local_epochs,
-                          min_epochs, self.use_relay, plan=plan,
-                          max_hops=self.max_hops)
-            if p is not None:
-                plans.append(p)
+        if plan is not None:
+            # One batched routing call for the whole round instead of one
+            # Dijkstra per candidate: compute every candidate's
+            # earliest-return instant first, then relax all sources over
+            # the contact graph in a handful of array sweeps.
+            prefixes = {}
+            for k in (int(k) for k in idle):
+                px = _plan_prefix(k, t, aw, strategy, hw, local_epochs,
+                                  min_epochs, plan=plan)
+                if px is not None:
+                    prefixes[k] = px
+            cands = list(prefixes)
+            if cands:
+                routes = batch_earliest_arrival(
+                    plan, cands, [prefixes[k][5] for k in cands],
+                    hw.model_bytes,
+                    max_hops=self.max_hops if self.use_relay else 0)
+                for k, route in zip(cands, routes):
+                    p = _plan_for(k, t, aw, strategy, hw, local_epochs,
+                                  min_epochs, self.use_relay, plan=plan,
+                                  max_hops=self.max_hops, route=route)
+                    if p is not None:
+                        plans.append(p)
+        else:
+            for k in idle:
+                p = _plan_for(int(k), t, aw, strategy, hw, local_epochs,
+                              min_epochs, self.use_relay, plan=plan,
+                              max_hops=self.max_hops)
+                if p is not None:
+                    plans.append(p)
         # Base rule: order by *initial contact* (first to reach a station).
         # Schedule rule: order by projected parameter-return time.
         key = (lambda p: (p.tx_end, p.rx_start)) if self.schedule \

@@ -35,6 +35,67 @@ def visibility_grid(elements: dict, lat: jax.Array, lon: jax.Array,
     return elevation_deg(sat, gs) >= mask_deg
 
 
+def extract_intervals(vis: np.ndarray, t0: float, dt_s: float
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Rise/fall intervals of every track of a (..., T) boolean grid.
+
+    Fully vectorized replacement for the per-event Python pairing loop:
+    pads each track with False on both sides, finds the flip positions,
+    and pairs them up (flips alternate rise/fall per track, and
+    ``np.nonzero`` returns row-major order, so consecutive flips within a
+    track match up — the exact invariant the old ``zip(es[0::2], ...)``
+    loop relied on).
+
+    Returns ``(track, rises, falls)``: flat int track ids (row-major over
+    the leading axes) and the float64 interval bounds ``t0 + index*dt_s``
+    — bitwise-identical arithmetic to the scalar loop.
+    """
+    T = vis.shape[-1]
+    grid = vis.reshape(-1, T)
+    padded = np.zeros((grid.shape[0], T + 2), bool)
+    padded[:, 1:-1] = grid
+    flips = padded[:, 1:] != padded[:, :-1]
+    tracks, ts = np.nonzero(flips)
+    return tracks[0::2], t0 + ts[0::2] * dt_s, t0 + ts[1::2] * dt_s
+
+
+def merge_chunked_intervals(
+    track_chunks: list[np.ndarray], rise_chunks: list[np.ndarray],
+    fall_chunks: list[np.ndarray], n_tracks: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stitch per-chunk intervals back together, vectorized over tracks.
+
+    Chunked scans split a contact at every chunk boundary (the pad forces
+    a fall at the boundary, the next chunk a rise at the same instant).
+    Within one track the chunks arrive in time order with non-decreasing
+    bounds, so a stable sort by track id groups each track's intervals in
+    time order, and an interval continues its predecessor exactly when
+    its rise does not exceed the previous fall — the same rule as
+    ``_merge_intervals``, without the per-track Python loop. (For
+    *overlapping* interval sets — e.g. merging across stations — use
+    ``_merge_intervals``: its running-max end handles containment, which
+    the monotone-bounds assumption here rules out.)
+
+    Returns ``(counts, starts, ends)``: per-track interval counts (length
+    `n_tracks`, so ``np.split(starts, np.cumsum(counts)[:-1])`` recovers
+    per-track arrays) and the flat merged bounds.
+    """
+    trk = np.concatenate(track_chunks) if track_chunks else np.empty(0, int)
+    rise = np.concatenate(rise_chunks) if rise_chunks else np.empty(0)
+    fall = np.concatenate(fall_chunks) if fall_chunks else np.empty(0)
+    order = np.argsort(trk, kind="stable")
+    trk, rise, fall = trk[order], rise[order], fall[order]
+    if len(trk) == 0:
+        return np.zeros(n_tracks, int), rise, fall
+    new = np.empty(len(trk), bool)
+    new[0] = True
+    new[1:] = (trk[1:] != trk[:-1]) | (rise[1:] > fall[:-1])
+    first = np.flatnonzero(new)
+    last = np.append(first[1:], len(trk)) - 1
+    counts = np.bincount(trk[first], minlength=n_tracks)
+    return counts, rise[first], fall[last]
+
+
 def _merge_intervals(intervals: list[tuple[float, float]]
                      ) -> list[tuple[float, float]]:
     if not intervals:
@@ -138,9 +199,9 @@ def compute_access_windows(
     K, G = constellation.n_sats, len(stations)
     n_steps = int(np.ceil(horizon_s / dt_s)) + 1
 
-    raw: list[list[list[tuple[float, float]]]] = [
-        [[] for _ in range(G)] for _ in range(K)
-    ]
+    trk_chunks: list[np.ndarray] = []
+    rise_chunks: list[np.ndarray] = []
+    fall_chunks: list[np.ndarray] = []
     for c0 in range(0, n_steps, chunk_steps):
         c1 = min(c0 + chunk_steps, n_steps)
         with span("orbits.access_chunk", t0_step=c0, steps=c1 - c0,
@@ -149,31 +210,32 @@ def compute_access_windows(
             vis = np.asarray(visibility_grid(elements, lat, lon,
                                              jnp.asarray(t),
                                              mask_deg=mask_deg))
-        # Vectorized edge extraction across all (sat, station) tracks.
-        padded = np.zeros((K, G, vis.shape[2] + 2), bool)
-        padded[:, :, 1:-1] = vis
-        edges = padded[:, :, 1:] != padded[:, :, :-1]
-        ks, gs, ts = np.nonzero(edges)
-        # Edges alternate rise/set per (k, g) track; nonzero returns them
-        # in row-major order so consecutive pairs within a track match up.
-        t0 = float(t[0])
-        for k, g, rise, fall in zip(ks[0::2], gs[0::2],
-                                    t0 + ts[0::2] * dt_s,
-                                    t0 + ts[1::2] * dt_s):
-            raw[int(k)][int(g)].append((float(rise), float(fall)))
+        # Vectorized rise/fall pairing across all (sat, station) tracks —
+        # no per-event Python loop; track id is k * G + g (row-major).
+        trk, rises, falls = extract_intervals(vis, float(t[0]), dt_s)
+        trk_chunks.append(trk)
+        rise_chunks.append(rises)
+        fall_chunks.append(falls)
+
+    # Stitch contacts split at chunk boundaries (vectorized over all
+    # (sat, station) tracks at once), then split the flat result.
+    counts, starts, ends = merge_chunked_intervals(
+        trk_chunks, rise_chunks, fall_chunks, K * G)
+    cuts = np.cumsum(counts)[:-1]
+    s_split = np.split(starts, cuts)
+    e_split = np.split(ends, cuts)
 
     per_sat_station: list[list[tuple[np.ndarray, np.ndarray]]] = []
     per_sat: list[tuple[np.ndarray, np.ndarray]] = []
     for k in range(K):
-        row = []
-        merged_all: list[tuple[float, float]] = []
-        for g in range(G):
-            ivs = _merge_intervals(raw[k][g])  # stitch chunk boundaries
-            row.append((np.array([s for s, _ in ivs]),
-                        np.array([e for _, e in ivs])))
-            merged_all.extend(ivs)
+        row = list(zip(s_split[k * G:(k + 1) * G],
+                       e_split[k * G:(k + 1) * G]))
         per_sat_station.append(row)
-        merged = _merge_intervals(merged_all)
+        # Stations overlap, so the satellite-level merge keeps the
+        # running-max-end rule of `_merge_intervals`.
+        merged = _merge_intervals(
+            [(float(s), float(e)) for st, en in row
+             for s, e in zip(st, en)])
         per_sat.append((np.array([s for s, _ in merged]),
                         np.array([e for _, e in merged])))
 

@@ -84,6 +84,39 @@ def eci_positions_np(elements: dict, t: np.ndarray) -> np.ndarray:
     return np.stack([x, y, z], axis=-1)  # (K,T,3)
 
 
+def eci_positions_at_np(elements: dict, sat_idx: np.ndarray,
+                        t: np.ndarray) -> np.ndarray:
+    """Position of satellite `sat_idx[n]` at time `t[n]` — the
+    gather-shaped float64 twin of `eci_positions_np`.
+
+    Returns (N, 3) instead of (K, T, 3): each output row pairs one
+    satellite with one instant. Batched geometry caches (e.g. pricing
+    every ISL window midpoint of a 1,000-sat plan in one call) need
+    exactly this shape — the dense (K, T, 3) grid would propagate every
+    satellite at every other edge's midpoints. Same formulas and float64
+    op order as `eci_positions_np`, so each row is bitwise-identical to
+    the corresponding entry of the dense grid.
+    """
+    idx = np.asarray(sat_idx, dtype=np.int64)
+    raan = np.asarray(elements["raan"], dtype=float)[idx]          # (N,)
+    n = np.sqrt(MU_EARTH / float(np.asarray(elements["a"])) ** 3)
+    theta = (np.asarray(elements["anomaly0"], dtype=float)[idx]
+             + n * np.asarray(t, dtype=float))                     # (N,)
+    a = float(np.asarray(elements["a"]))
+    inc = float(np.asarray(elements["inc"]))
+
+    xp = a * np.cos(theta)
+    yp = a * np.sin(theta)
+
+    cos_i, sin_i = np.cos(inc), np.sin(inc)
+    cos_O, sin_O = np.cos(raan), np.sin(raan)
+
+    x = cos_O * xp - sin_O * cos_i * yp
+    y = sin_O * xp + cos_O * cos_i * yp
+    z = sin_i * yp
+    return np.stack([x, y, z], axis=-1)  # (N,3)
+
+
 def gs_eci_positions(lat_deg: jax.Array, lon_deg: jax.Array, t: jax.Array,
                      gmst0: float = 0.0) -> jax.Array:
     """Ground-station ECI positions on the rotating earth.

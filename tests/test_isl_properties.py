@@ -1,0 +1,116 @@
+"""Property tests for the mega-constellation ISL scale-out.
+
+Two invariants behind `repro.comms.isl`'s array-shaped window search:
+
+  * Walker-grid candidate pruning is *lossless per edge*: every edge the
+    pruned (ring + cross-plane + k-nearest-seam) candidate set proposes
+    gets bitwise-identical contact windows to the same edge under the
+    unpruned all-pairs search — pruning changes which edges are
+    considered, never what any edge's geometry says.
+  * The vectorized rise/fall interval extraction is bitwise-equal to the
+    seed's per-track Python pairing loop (`zip(es[0::2], es[1::2])`) on
+    arbitrary boolean visibility grids.
+
+Hypothesis variants explore adaptively and skip cleanly when hypothesis
+is not installed (see conftest); the seeded variants always run.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st_
+
+from repro.comms.isl import ISLTopology, compute_isl_windows
+from repro.orbits.access import extract_intervals
+from repro.orbits.walker import WalkerStar
+
+HORIZON_S = 0.25 * 86400.0
+DT_S = 60.0
+
+
+# ----------------------------------------------- vectorized extraction --
+def _reference_intervals(vis, t0, dt_s):
+    """The seed's per-track pairing loop: pad, flip, zip even/odd."""
+    T = vis.shape[-1]
+    grid = vis.reshape(-1, T)
+    trk, rises, falls = [], [], []
+    for r, row in enumerate(grid):
+        padded = np.zeros(T + 2, bool)
+        padded[1:-1] = row
+        es = np.flatnonzero(padded[1:] != padded[:-1])
+        for a, b in zip(es[0::2], es[1::2]):
+            trk.append(r)
+            rises.append(t0 + a * dt_s)
+            falls.append(t0 + b * dt_s)
+    return (np.asarray(trk, int), np.asarray(rises, float),
+            np.asarray(falls, float))
+
+
+def check_extraction_bitwise(vis, t0, dt_s):
+    trk, rises, falls = extract_intervals(vis, t0, dt_s)
+    rtrk, rrises, rfalls = _reference_intervals(vis, t0, dt_s)
+    np.testing.assert_array_equal(trk, rtrk)
+    np.testing.assert_array_equal(rises, rrises)   # bitwise: == on floats
+    np.testing.assert_array_equal(falls, rfalls)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_extraction_matches_pairing_loop_seeded(seed):
+    rng = np.random.default_rng(seed)
+    shape = (int(rng.integers(1, 6)), int(rng.integers(1, 5)),
+             int(rng.integers(1, 200)))
+    vis = rng.random(shape) < rng.uniform(0.05, 0.95)
+    check_extraction_bitwise(vis, float(rng.uniform(0, 1e6)),
+                             float(rng.uniform(0.5, 120.0)))
+
+
+def test_extraction_edge_cases():
+    for vis in (np.zeros((3, 7), bool), np.ones((3, 7), bool),
+                np.zeros((2, 0, 5), bool), np.ones((1, 1), bool)):
+        check_extraction_bitwise(vis, 0.0, 30.0)
+
+
+@given(seed=st_.integers(min_value=0, max_value=2**32 - 1),
+       density=st_.floats(min_value=0.0, max_value=1.0))
+@settings(max_examples=40, deadline=None)
+def test_extraction_matches_pairing_loop_property(seed, density):
+    rng = np.random.default_rng(seed)
+    shape = (int(rng.integers(1, 8)), int(rng.integers(1, 300)))
+    vis = rng.random(shape) < density
+    check_extraction_bitwise(vis, float(rng.uniform(0, 1e7)),
+                             float(rng.uniform(0.5, 120.0)))
+
+
+# ------------------------------------------------- walker-grid pruning --
+def _all_pairs(n_sats):
+    return ISLTopology(edges=tuple((i, j) for i in range(n_sats)
+                                   for j in range(i + 1, n_sats)))
+
+
+@pytest.mark.parametrize("planes,spp", [(2, 2), (3, 3), (4, 4)])
+def test_walker_grid_windows_match_unpruned(planes, spp):
+    c = WalkerStar(planes, spp)
+    pruned = ISLTopology.walker_grid(c, cross_plane=True, seam_k=2)
+    full = compute_isl_windows(c, _all_pairs(c.n_sats),
+                               horizon_s=HORIZON_S, dt_s=DT_S)
+    got = compute_isl_windows(c, pruned, horizon_s=HORIZON_S, dt_s=DT_S)
+    by_edge = {e: w for e, w in zip(full.edges, full.per_edge)}
+    assert pruned.n_edges > 0
+    for e, (starts, ends) in zip(got.edges, got.per_edge):
+        np.testing.assert_array_equal(starts, by_edge[e][0],
+                                      err_msg=f"edge {e} starts")
+        np.testing.assert_array_equal(ends, by_edge[e][1],
+                                      err_msg=f"edge {e} ends")
+
+
+def test_walker_grid_supersets_walker_star():
+    """The pruned candidate generator degenerates to the seed topology:
+    seam_k=0 IS walker_star, and adding seam candidates only ever
+    grows the edge set."""
+    for planes, spp in ((2, 3), (3, 4), (4, 4)):
+        c = WalkerStar(planes, spp)
+        star = set(ISLTopology.walker_star(c, cross_plane=True).edges)
+        grid = set(ISLTopology.walker_grid(c, cross_plane=True,
+                                           seam_k=2).edges)
+        assert star <= grid
+        assert set(ISLTopology.walker_grid(c, cross_plane=True,
+                                           seam_k=0).edges) == star

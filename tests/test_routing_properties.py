@@ -16,13 +16,15 @@ when hypothesis isn't installed — see conftest); the seeded variants run
 the same checkers over a fixed fleet of random plans so tier-1 always
 exercises the properties.
 """
+import itertools
+
 import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st_
 
 from repro.comms.contact_plan import ContactPlan, _EdgeWindows
-from repro.comms.routing import earliest_arrival
+from repro.comms.routing import batch_earliest_arrival, earliest_arrival
 
 HORIZON = 1e6
 
@@ -180,3 +182,105 @@ def test_itinerary_consistency_property(seed):
     route = earliest_arrival(plan, src, t_ready, n_bytes, max_hops=3)
     if route is not None:
         check_itinerary_consistency(plan, route, src, t_ready, n_bytes)
+
+
+# ------------------------------------------------ batch-vs-Dijkstra parity --
+def check_batch_parity(plan, srcs, t_ready, n_bytes, max_hops):
+    """The batch router must reproduce per-source Dijkstra EXACTLY —
+    same path, departure, tx window, arrival, hop count — including
+    None where no ground pass exists."""
+    batch = batch_earliest_arrival(plan, srcs, t_ready, n_bytes,
+                                   max_hops=max_hops)
+    t_arr = np.broadcast_to(np.asarray(t_ready, float), (len(srcs),))
+    for src, tr, got in zip(srcs, t_arr, batch):
+        want = earliest_arrival(plan, int(src), float(tr), n_bytes,
+                                max_hops=max_hops)
+        if want is None:
+            assert got is None, f"src {src}: batch found a route, "\
+                                "Dijkstra none"
+            continue
+        assert got is not None, f"src {src}: batch lost the route"
+        assert got.path == want.path, f"src {src}"
+        assert got.departure_s == want.departure_s, f"src {src}"
+        assert got.tx_start == want.tx_start, f"src {src}"
+        assert got.arrival_s == want.arrival_s, f"src {src}"
+        assert got.isl_hops == want.isl_hops, f"src {src}"
+        assert got.bytes_on_wire == want.bytes_on_wire, f"src {src}"
+
+
+@pytest.mark.parametrize("seed", range(30))
+def test_batch_matches_dijkstra_seeded(seed):
+    rng = np.random.default_rng(2000 + seed)
+    plan = random_plan(rng)
+    srcs = list(range(plan.n_sats))
+    t_ready = float(rng.uniform(0, HORIZON * 0.6))
+    n_bytes = float(rng.uniform(1e3, 5e7))
+    check_batch_parity(plan, srcs, t_ready, n_bytes,
+                       max_hops=int(rng.integers(0, 5)))
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_batch_matches_dijkstra_per_source_t_ready(seed):
+    rng = np.random.default_rng(3000 + seed)
+    plan = random_plan(rng)
+    srcs = list(range(plan.n_sats))
+    t_ready = rng.uniform(0, HORIZON * 0.6, size=len(srcs))
+    check_batch_parity(plan, srcs, t_ready, float(rng.uniform(1e3, 5e6)),
+                       max_hops=3)
+
+
+@given(seed=st_.integers(min_value=0, max_value=2**32 - 1),
+       hops=st_.integers(min_value=0, max_value=5))
+@settings(max_examples=40, deadline=None)
+def test_batch_matches_dijkstra_property(seed, hops):
+    rng = np.random.default_rng(seed)
+    plan = random_plan(rng)
+    srcs = list(range(plan.n_sats))
+    t_ready = float(rng.uniform(0, HORIZON * 0.6))
+    check_batch_parity(plan, srcs, t_ready,
+                       float(rng.uniform(1e3, 5e7)), max_hops=hops)
+
+
+# ---------------------------------------- frontier-pruning optimality pin --
+def _brute_force_arrival(plan, src, t_ready, n_bytes, max_hops):
+    """Exhaustive earliest arrival over every simple path of <= max_hops
+    ISL legs — the ground truth the frontier-pruned Dijkstra must match.
+    Greedy per-leg timing is exact here because each leg's completion is
+    monotone in its start time."""
+    best = np.inf
+    others = [k for k in range(plan.n_sats) if k != src]
+    for n_legs in range(0, max_hops + 1):
+        for tail in itertools.permutations(others, n_legs):
+            t = t_ready
+            for a, b in zip((src,) + tail, tail):
+                leg = plan.next_isl_transfer(a, b, t, n_bytes)
+                if leg is None:
+                    t = None
+                    break
+                t = leg[1]
+            if t is None:
+                continue
+            up = plan.next_ground_upload(((src,) + tail)[-1], t, n_bytes)
+            if up is not None:
+                best = min(best, up[1])
+    return best
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_frontier_pruning_keeps_optimal_routes(seed):
+    """The monotone arrival frontier in `_earliest_arrival` is a pure
+    dominance prune: the returned arrival must equal the exhaustive
+    simple-path minimum (and stay in lockstep with the batch router)."""
+    rng = np.random.default_rng(4000 + seed)
+    plan = random_plan(rng)
+    t_ready = float(rng.uniform(0, HORIZON * 0.6))
+    n_bytes = float(rng.uniform(1e3, 5e6))
+    max_hops = int(rng.integers(0, 4))
+    for src in range(plan.n_sats):
+        route = earliest_arrival(plan, src, t_ready, n_bytes,
+                                 max_hops=max_hops)
+        want = _brute_force_arrival(plan, src, t_ready, n_bytes, max_hops)
+        if route is None:
+            assert np.isinf(want), f"src {src}: pruned away the only route"
+        else:
+            assert route.arrival_s == want, f"src {src}"
