@@ -42,6 +42,7 @@ from benchmarks.common import (     # noqa: E402
     STATIONS,
     emit,
     run_scenario,
+    run_scenarios_batched,
 )
 
 ALG_SUITE = ("fedavg", "fedavg_sched", "fedavg_intracc",
@@ -53,7 +54,11 @@ ISL_SUITE = ("fedavg_intracc_isl", "fedprox_intracc_isl")
 def run(rounds: int = 20, quick: bool = False, isl: bool = False,
         horizon_s: float = HORIZON_S, workload: str | None = None,
         train: bool = False, execution: str | None = None,
-        link_model: str | None = None, smoke: bool = False):
+        link_model: str | None = None, smoke: bool = False,
+        batched: bool = False):
+    if batched and execution:
+        raise ValueError("--batched is its own vmapped executor; "
+                         "--execution selects the loop path's")
     algs = ALG_SUITE[:4] if quick else ALG_SUITE
     if isl:
         algs = algs + ISL_SUITE
@@ -81,32 +86,41 @@ def run(rounds: int = 20, quick: bool = False, isl: bool = False,
         if not train:
             raise ValueError("execution= requires train=True")
         wtag += f"@{execution}"
+    grid = [(alg, cl, sp, g) for alg in algs for cl in clusters
+            for sp in sats for g in stations]
+    cells = [c for c in grid if c[1] * c[2] >= 2]
+    if batched:
+        # One BatchedSweep over every federating cell: rows are built from
+        # the same SimResult fields, so the output diffs 1:1 against the
+        # loop path above (durations/idle bitwise for timing-only runs).
+        results = dict(zip(cells, run_scenarios_batched(
+            cells, rounds=rounds, train=train, horizon_s=horizon_s,
+            workload=workload, link_model=link_model)))
+    else:
+        results = {c: run_scenario(*c, rounds=rounds, horizon_s=horizon_s,
+                                   workload=workload, train=train,
+                                   execution=execution,
+                                   link_model=link_model)
+                   for c in cells}
     rows = []
     n_run = n_skip = 0
-    for alg in algs:
-        for cl in clusters:
-            for sp in sats:
-                for g in stations:
-                    if cl * sp < 2:
-                        n_skip += 1   # single satellite cannot federate
-                        rows.append((f"sweep{wtag}/{alg}/c{cl}s{sp}/g{g}",
-                                     0, "skip:K<2"))
-                        continue
-                    res = run_scenario(alg, cl, sp, g, rounds=rounds,
-                                       horizon_s=horizon_s,
-                                       workload=workload, train=train,
-                                       execution=execution,
-                                       link_model=link_model)
-                    derived = round(res.mean_idle_per_round_s / 3600, 3)
-                    if alg.endswith("_isl"):
-                        derived = (f"idle_h={derived};"
-                                   f"hops={res.total_relay_hops};"
-                                   f"mb={round(res.total_comms_bytes / 1e6, 2)}")
-                    rows.append((
-                        f"sweep{wtag}/{alg}/c{cl}s{sp}/g{g}",
-                        round(res.mean_round_duration_s / 3600, 3),
-                        derived))
-                    n_run += 1
+    for alg, cl, sp, g in grid:
+        if cl * sp < 2:
+            n_skip += 1   # single satellite cannot federate
+            rows.append((f"sweep{wtag}/{alg}/c{cl}s{sp}/g{g}",
+                         0, "skip:K<2"))
+            continue
+        res = results[(alg, cl, sp, g)]
+        derived = round(res.mean_idle_per_round_s / 3600, 3)
+        if alg.endswith("_isl"):
+            derived = (f"idle_h={derived};"
+                       f"hops={res.total_relay_hops};"
+                       f"mb={round(res.total_comms_bytes / 1e6, 2)}")
+        rows.append((
+            f"sweep{wtag}/{alg}/c{cl}s{sp}/g{g}",
+            round(res.mean_round_duration_s / 3600, 3),
+            derived))
+        n_run += 1
     rows.append((f"sweep{wtag}/scenarios_run", n_run, f"skipped={n_skip}"))
     return rows
 
@@ -132,6 +146,11 @@ def main(argv=None):
     ap.add_argument("--execution", default=None, choices=("host", "mesh"),
                     help="client-update execution mode for --train runs "
                          "(default: the workload's declared mode)")
+    ap.add_argument("--batched", action="store_true",
+                    help="run the grid as ONE BatchedSweep (repro.sim."
+                         "batched) instead of per-cell sim runs; rows are "
+                         "parity-checked against the loop path (timing "
+                         "bitwise, --train accuracy within 1e-5)")
     ap.add_argument("--link-model", default=None,
                     choices=("constant", "budget"),
                     help="comms pricing: constant 580 Mbps telemetry "
@@ -147,6 +166,9 @@ def main(argv=None):
     if args.execution and not args.train:
         ap.error("--execution changes how gradients run; pair it with "
                  "--train (a timing-only sweep would mislabel its rows)")
+    if args.batched and args.execution:
+        ap.error("--batched is its own vmapped executor; --execution "
+                 "selects the loop path's (host/mesh)")
     if args.trace_jsonl and not args.trace:
         ap.error("--trace-jsonl requires --trace (one tracer, two views)")
     horizon_s = (args.horizon_days * 86400.0 if args.horizon_days
@@ -157,7 +179,8 @@ def main(argv=None):
     emit(run(rounds=args.rounds, quick=args.quick, isl=args.isl,
              horizon_s=horizon_s, workload=args.workload,
              train=args.train, execution=args.execution,
-             link_model=args.link_model, smoke=args.smoke))
+             link_model=args.link_model, smoke=args.smoke,
+             batched=args.batched))
     if args.trace:
         summary = obs.metrics_summary()
         obs.write_chrome_trace(args.trace)

@@ -39,10 +39,12 @@ import time
 DURATION_SUITES = ("sweep_ci", "sweep768", "round_duration")
 # Suites whose rows are deterministic simulated quantities pinned in BOTH
 # directions (window counts, reachability, arrival times of the
-# mega-constellation scale bench): any drift is a behaviour change in
-# the comms stack, not noise — lower reachability is as much a
-# regression as a later arrival.
-DRIFT_SUITES = ("scale",)
+# mega-constellation scale bench; batched-vs-loop parity counts and
+# training durations of the batched scenario sweep): any drift is a
+# behaviour change in the comms or sim stack, not noise — lower
+# reachability is as much a regression as a later arrival, and a parity
+# count below the grid size means the batched executor diverged.
+DRIFT_SUITES = ("scale", "batched")
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "..",
                                 "BENCH_sweep.json")
 # CI trend-grid knobs — must stay identical between the committed
@@ -188,6 +190,90 @@ def generate_scale_suite() -> dict:
             "rows": [list(r) for r in rows]}
 
 
+def generate_batched_suite() -> dict:
+    """Batched-vs-loop parity suite (`repro.sim.batched`).
+
+    Three passes, all deterministic simulated quantities (DRIFT-gated):
+
+      1. the quick trend grid on the loop path (per-cell sim runs);
+      2. the SAME grid as one `BatchedSweep` — the per-row match count is
+         the committed parity claim (timing rows are bitwise);
+      3. a small --train parity slice (fedavg / fedprox / fedbuff): round
+         durations ride the baseline both ways, and `acc_match` pins the
+         accuracy curves to the loop path within 1e-5.
+
+    The wall breakdowns of passes 1 and 2 are snapshotted separately
+    (`wall_breakdown_loop` vs `wall_breakdown_batched`) — the committed
+    evidence that batching cuts the grid's `bench.scenario` wall
+    (informational, like every wall number here).
+    """
+    from benchmarks import bench_sweep, common
+
+    from repro import obs
+
+    fresh = not obs.enabled()
+    if fresh:
+        obs.enable()
+
+    def snap():
+        return {k: v["total_s"]
+                for k, v in obs.metrics_summary().get("spans", {}).items()}
+
+    def delta(spans0):
+        out = {}
+        for name, s in obs.metrics_summary().get("spans", {}).items():
+            d = s["total_s"] - spans0.get(name, 0.0)
+            if d >= 0.005:
+                out[name] = round(d, 3)
+        return dict(sorted(out.items(), key=lambda kv: -kv[1]))
+
+    knobs = dict(rounds=TREND_ROUNDS, quick=True,
+                 horizon_s=TREND_HORIZON_DAYS * 86400.0)
+    s0 = snap()
+    t0 = time.perf_counter()
+    loop_rows = bench_sweep.run(**knobs)
+    wall_loop = time.perf_counter() - t0
+    breakdown_loop = delta(s0)
+
+    s0 = snap()
+    t0 = time.perf_counter()
+    batched_rows = bench_sweep.run(batched=True, **knobs)
+    wall_batched = time.perf_counter() - t0
+    breakdown_batched = delta(s0)
+
+    bmap = {r[0]: tuple(r[1:]) for r in batched_rows}
+    n_match = sum(1 for r in loop_rows if bmap.get(r[0]) == tuple(r[1:]))
+    rows = [("batched/timing_parity_rows", n_match,
+             f"of={len(loop_rows)}")]
+
+    # --train parity slice: one small scenario per algorithm family.
+    for alg in ("fedavg", "fedprox", "fedbuff"):
+        cell = (alg, 2, 2, 1)
+        lr = common.run_scenario(*cell, rounds=3, train=True, eval_every=2,
+                                 horizon_s=knobs["horizon_s"])
+        br = common.run_scenarios_batched([cell], rounds=3, train=True,
+                                          eval_every=2,
+                                          horizon_s=knobs["horizon_s"])[0]
+        cl = {i: a for i, _, a in lr.accuracy_curve}
+        cb = {i: a for i, _, a in br.accuracy_curve}
+        err = (max((abs(cl[i] - cb[i]) for i in cl), default=0.0)
+               if set(cl) == set(cb) else float("inf"))
+        rows.append((f"batched/train/{alg}/duration",
+                     round(br.mean_round_duration_s / 3600, 3),
+                     f"rounds={len(br.rounds)}"))
+        rows.append((f"batched/train/{alg}/acc_match",
+                     int(err <= 1e-5), f"maxerr={err:.2e}"))
+    if fresh:
+        obs.disable()
+    return {"rounds": TREND_ROUNDS,
+            "horizon_days": TREND_HORIZON_DAYS,
+            "wall_s_loop": round(wall_loop, 2),
+            "wall_s_batched": round(wall_batched, 2),
+            "wall_breakdown_loop": breakdown_loop,
+            "wall_breakdown_batched": breakdown_batched,
+            "rows": [list(r) for r in rows]}
+
+
 def wall_trend(baseline: dict, current: dict) -> list[str]:
     """Informational wall-clock trend lines (never gate CI: wall seconds
     are machine-dependent, unlike the simulated duration rows)."""
@@ -222,6 +308,7 @@ def main(argv=None) -> int:
 
     current = generate_trend_suite()
     current["suites"]["scale"] = generate_scale_suite()
+    current["suites"]["batched"] = generate_batched_suite()
     path = args.baseline
 
     if args.write_baseline:
@@ -233,6 +320,7 @@ def main(argv=None) -> int:
         merged.setdefault("suites", {})
         merged["suites"]["sweep_ci"] = current["suites"]["sweep_ci"]
         merged["suites"]["scale"] = current["suites"]["scale"]
+        merged["suites"]["batched"] = current["suites"]["batched"]
         with open(path, "w") as f:
             json.dump(merged, f, indent=1)
         print(f"# wrote trend baseline to {os.path.normpath(path)}")

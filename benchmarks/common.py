@@ -215,8 +215,11 @@ def run_scenario(alg: str, clusters: int, sats: int, n_stations: int,
             workload=workload, execution=execution, link_model=link_model)
 
 
-def _run_scenario(alg, clusters, sats, n_stations, *, rounds, train, seed,
-                  eval_every, horizon_s, workload, execution, link_model):
+def make_scenario_sim(alg, clusters, sats, n_stations, *, rounds, train,
+                      seed, eval_every, horizon_s, workload, execution,
+                      link_model) -> ConstellationSim:
+    """Build (but don't run) the `ConstellationSim` for one sweep cell —
+    the loop path calls `.run()` on it; the batched path stacks many."""
     c = WalkerStar(clusters, sats)
     aw = access(clusters, sats, n_stations, horizon_s)
     algorithm = ALGORITHMS[alg]
@@ -245,12 +248,41 @@ def _run_scenario(alg, clusters, sats, n_stations, *, rounds, train, seed,
     kwargs = {} if workload is None else {"workload": workload}
     if execution is not None:
         kwargs["execution"] = execution
-    sim = ConstellationSim(
+    return ConstellationSim(
         c, station_subnetwork(n_stations), algorithm,
         data=(data_for(c.n_sats, seed, workload or DEFAULT_WORKLOAD)
               if train else None),
         cfg=cfg, access=aw, contact_plan=plan, **kwargs)
-    return sim.run()
+
+
+def _run_scenario(alg, clusters, sats, n_stations, *, rounds, train, seed,
+                  eval_every, horizon_s, workload, execution, link_model):
+    return make_scenario_sim(
+        alg, clusters, sats, n_stations, rounds=rounds, train=train,
+        seed=seed, eval_every=eval_every, horizon_s=horizon_s,
+        workload=workload, execution=execution, link_model=link_model).run()
+
+
+def run_scenarios_batched(cells, *, rounds: int = 30, train: bool = False,
+                          seed: int = 0, eval_every: int = 10,
+                          horizon_s: float = HORIZON_S,
+                          workload: str | None = None,
+                          link_model: str | None = None):
+    """Run a list of `(alg, clusters, sats, n_stations)` sweep cells as ONE
+    `BatchedSweep` instead of per-cell `ConstellationSim.run()` calls.
+    Returns SimResults in cell order — records bitwise the loop path's
+    for timing, within the 1e-5 parity envelope for training."""
+    from repro.sim.batched import BatchedSweep
+    sims, names = [], []
+    for alg, clusters, sats, n_stations in cells:
+        names.append(f"{alg}/c{clusters}s{sats}/g{n_stations}")
+        sims.append(make_scenario_sim(
+            alg, clusters, sats, n_stations, rounds=rounds, train=train,
+            seed=seed, eval_every=eval_every, horizon_s=horizon_s,
+            workload=workload, execution=None, link_model=link_model))
+    with span("bench.batched_grid", scenarios=len(sims), train=train,
+              workload=workload, link_model=str(link_model)):
+        return BatchedSweep(sims, names).run()
 
 
 def emit(rows, header=("name", "value", "derived")):

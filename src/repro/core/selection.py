@@ -38,6 +38,12 @@ from repro.comms.routing import batch_earliest_arrival, earliest_arrival
 # Sentinel distinguishing "route not precomputed" (fall back to a
 # per-source Dijkstra) from "batch router found no route" (None).
 _UNROUTED = object()
+
+# Bounded retry for the download-fit check: a candidate slides to at most
+# this many later passes looking for one long enough to hold the download
+# before being dropped from the round. Under LinkBudget fading consecutive
+# short passes are common; unbounded sliding could walk the whole horizon.
+MAX_PASS_SLIDES = 8
 from repro.core.strategies.base import ClientWorkMode, Strategy
 from repro.core.timing import HardwareModel
 from repro.orbits.access import AccessWindows
@@ -85,13 +91,22 @@ def _plan_prefix(
     `batch_earliest_arrival` call.
     """
     # --- download pass ---------------------------------------------------
+    # The fit check loops: a pass too short for the download (rate-priced
+    # under a ContactPlan, flat-rate otherwise) slides the candidate to the
+    # next pass, and the NEXT pass must pass the same check — under
+    # LinkBudget fading consecutive passes can all be too short, so the
+    # retry is bounded (MAX_PASS_SLIDES) and exhaustion drops the candidate.
     if plan is not None:
         w0 = plan.next_window(("gs", k), t)
         if w0 is None:
             return None
         rx_start = w0.start
         rx_end = rx_start + hw.tx_time_for(rate_bps=w0.rate_bps)
-        if rx_end > w0.end:  # download does not fit: slide into next pass
+        slides = 0
+        while rx_end > w0.end:  # download does not fit: slide to next pass
+            if slides >= MAX_PASS_SLIDES:
+                return None
+            slides += 1
             w0 = plan.next_window(("gs", k), w0.end + 1.0)
             if w0 is None:
                 return None
@@ -104,7 +119,11 @@ def _plan_prefix(
             return None
         rx_start = w[0]
         rx_end = rx_start + hw.tx_time_s
-        if rx_end > w[1]:  # download does not fit: slide into the next pass
+        slides = 0
+        while rx_end > w[1]:  # download does not fit: slide to next pass
+            if slides >= MAX_PASS_SLIDES:
+                return None
+            slides += 1
             w2 = aw.next_window(k, w[1] + 1.0)
             if w2 is None:
                 return None

@@ -1,4 +1,15 @@
 from repro.sim.engine import ConstellationSim, SimConfig
 from repro.sim.metrics import RoundRecord, SimResult
 
-__all__ = ["ConstellationSim", "SimConfig", "RoundRecord", "SimResult"]
+
+def __getattr__(name):
+    # Lazy: `repro.sim.batched` pulls in the selector/aggregation stack,
+    # which plain engine users shouldn't pay import time for.
+    if name in ("BatchedSweep", "run_batched"):
+        from repro.sim import batched
+        return getattr(batched, name)
+    raise AttributeError(name)
+
+
+__all__ = ["ConstellationSim", "SimConfig", "RoundRecord", "SimResult",
+           "BatchedSweep", "run_batched"]

@@ -75,6 +75,38 @@ class SimConfig:
                                      # (parity harness; costs host memory)
 
 
+def client_steps(n_k: int, epochs: int, batch_size: int,
+                 max_steps: int) -> int:
+    """Local SGD steps for a client with `n_k` samples running `epochs`
+    epochs: `epochs * max(1, n_k // batch_size)`, clipped to [1, max_steps].
+    One formula shared by the loop engine and the batched scenario sweep
+    (`repro.sim.batched`) so their step schedules cannot drift."""
+    spe = max(1, n_k // batch_size)
+    return int(np.clip(epochs * spe, 1, max_steps))
+
+
+def sync_round_metrics(plans, t_start: float, t_end: float) -> dict:
+    """Per-satellite round metrics from a synchronous round's ClientPlans —
+    the kwargs `_finish_round` consumes. Shared by `_run_sync` and the
+    batched scenario planner so record arithmetic stays bitwise-identical."""
+    return dict(
+        t_start=t_start, t_end=t_end,
+        participants=[p.k for p in plans],
+        epochs=[p.epochs for p in plans],
+        idle_s=[max(0.0, (t_end - t_start)
+                    - (p.rx_end - p.rx_start)
+                    - (p.train_end - p.train_start)
+                    - (p.tx_end - p.tx_start)) for p in plans],
+        compute_s=[p.train_end - p.train_start for p in plans],
+        comm_s=[(p.rx_end - p.rx_start)
+                + (p.tx_end - p.tx_start) for p in plans],
+        relays=[p.relay for p in plans],
+        staleness=[0] * len(plans),
+        relay_hops=[p.isl_hops for p in plans],
+        comms_bytes=[p.comm_bytes for p in plans],
+    )
+
+
 def buffer_weights(ns: np.ndarray, staleness: np.ndarray,
                    max_staleness: int) -> np.ndarray:
     """FedBuff admission: updates staler than the bound get zero weight.
@@ -269,8 +301,8 @@ class ConstellationSim:
     # ------------------------------------------------------------------ #
     def _steps_for(self, k: int, epochs: int) -> int:
         n_k = int(self.data.n[k]) if self.data is not None else 256
-        spe = max(1, n_k // self.cfg.batch_size)
-        return int(np.clip(epochs * spe, 1, self.cfg.max_steps))
+        return client_steps(n_k, epochs, self.cfg.batch_size,
+                            self.cfg.max_steps)
 
     # ------------------------------------------------------------------ #
     # Shared round-execution core (sync barrier AND async buffer flushes)
@@ -418,6 +450,27 @@ class ConstellationSim:
         count("sim.rounds")
         return rec
 
+    def _final_eval(self, rounds: list[RoundRecord], curve: list,
+                    global_params) -> None:
+        """Evaluate the final model when a run exits off-cadence.
+
+        The round loops only hit the eval slot on the cadence (or, for the
+        sync barrier, on the max_rounds-th round), so a run truncated by
+        the horizon, an empty selection, or a drained event heap used to
+        end its accuracy curve rounds before the final aggregation. Called
+        on every exit path so `curve[-1]` always reflects `final_params`.
+        """
+        if not (self.cfg.train and rounds):
+            return
+        last = rounds[-1]
+        if curve and curve[-1][0] == last.idx:
+            return  # the cadence already evaluated the final model
+        with span("sim.eval", round=last.idx, trained=True,
+                  exit_path=True):
+            last.accuracy = self._eval(global_params, last.t_end)
+            curve.append((last.idx, last.t_end, last.accuracy))
+            count("sim.evals")
+
     def _result(self, rounds: list[RoundRecord], curve: list,
                 global_params) -> SimResult:
         final = (jax.device_get(global_params)
@@ -492,24 +545,12 @@ class ConstellationSim:
 
                 self._finish_round(
                     rounds, curve, global_params,
-                    t_start=t, t_end=t_end,
-                    participants=[p.k for p in plans],
-                    epochs=[p.epochs for p in plans],
-                    idle_s=[max(0.0, (t_end - t)
-                                - (p.rx_end - p.rx_start)
-                                - (p.train_end - p.train_start)
-                                - (p.tx_end - p.tx_start)) for p in plans],
-                    compute_s=[p.train_end - p.train_start for p in plans],
-                    comm_s=[(p.rx_end - p.rx_start)
-                            + (p.tx_end - p.tx_start) for p in plans],
-                    relays=[p.relay for p in plans],
-                    staleness=[0] * len(plans),
-                    relay_hops=[p.isl_hops for p in plans],
-                    comms_bytes=[p.comm_bytes for p in plans],
                     do_eval=(r % cfg.eval_every == 0
                              or r == cfg.max_rounds - 1),
+                    **sync_round_metrics(plans, t, t_end),
                 )
                 t = t_end
+        self._final_eval(rounds, curve, global_params)
         return self._result(rounds, curve, global_params)
 
     # ------------------------------------------------------------------ #
@@ -612,4 +653,5 @@ class ConstellationSim:
                 )
                 last_agg_t = t_agg
                 buffer = []
+        self._final_eval(rounds, curve, global_params)
         return self._result(rounds, curve, global_params)

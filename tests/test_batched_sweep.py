@@ -1,0 +1,172 @@
+"""Batched scenario sweep (`repro.sim.batched`): loop-path parity —
+timing records bitwise, training within the 1e-5 mesh-parity envelope —
+plus the scenario-stacked `WindowTable` and the sweep's guardrails."""
+import jax
+import numpy as np
+import pytest
+
+from repro.comms.contact_plan import WindowTable, _EdgeWindows
+from repro.core import ALGORITHMS
+from repro.orbits import WalkerStar, compute_access_windows, station_subnetwork
+from repro.sim import ConstellationSim, SimConfig
+from repro.sim.batched import BatchedSweep
+
+HORIZON = 4 * 86400.0
+_AW = {}
+
+TIMING_FIELDS = ("t_start", "t_end", "participants", "epochs", "idle_s",
+                 "compute_s", "comm_s", "relays", "staleness",
+                 "relay_hops", "comms_bytes")
+
+
+def _aw(cl, sp, g):
+    key = (cl, sp, g)
+    if key not in _AW:
+        _AW[key] = compute_access_windows(
+            WalkerStar(cl, sp), station_subnetwork(g), horizon_s=HORIZON)
+    return _AW[key]
+
+
+def _sim(alg, cl, sp, g, **cfg_kw):
+    cfg = SimConfig(horizon_s=HORIZON, **cfg_kw)
+    return ConstellationSim(WalkerStar(cl, sp), station_subnetwork(g),
+                            ALGORITHMS[alg], cfg=cfg, access=_aw(cl, sp, g),
+                            workload="femnist_mlp")
+
+
+def _assert_records_equal(alg, loop_res, batched_res):
+    assert len(loop_res.rounds) == len(batched_res.rounds), alg
+    assert len(loop_res.rounds) > 0, f"{alg}: no rounds planned"
+    for rl, rb in zip(loop_res.rounds, batched_res.rounds):
+        for field in TIMING_FIELDS:
+            assert getattr(rl, field) == getattr(rb, field), \
+                (alg, rl.idx, field)
+
+
+# ------------------------------------------------------- timing parity --
+def test_timing_parity_is_bitwise():
+    """Lockstep-planned (fedavg/sched/prox), relay-fallback (intracc) and
+    async-fallback (fedbuff) scenarios in one batch, all bitwise."""
+    cells = [("fedavg", 2, 2, 1), ("fedavg_sched", 2, 2, 2),
+             ("fedprox_sched_v2", 1, 5, 1), ("fedavg_intracc", 1, 5, 2),
+             ("fedbuff", 2, 2, 1)]
+    kw = dict(max_rounds=5, train=False, eval_every=2)
+    loop = [_sim(*c, **kw).run() for c in cells]
+    batched = BatchedSweep([_sim(*c, **kw) for c in cells],
+                           names=[c[0] for c in cells]).run()
+    for (alg, *_), lr, br in zip(cells, loop, batched):
+        _assert_records_equal(alg, lr, br)
+
+
+def test_timing_parity_without_lockstep_planner():
+    """batched_planning=False forces every scenario through its scalar
+    twin — pinning that the lockstep planner changes nothing."""
+    cells = [("fedavg", 2, 2, 1), ("fedprox", 2, 2, 1)]
+    kw = dict(max_rounds=4, train=False, eval_every=2)
+    loop = [_sim(*c, **kw).run() for c in cells]
+    batched = BatchedSweep([_sim(*c, **kw) for c in cells],
+                           batched_planning=False).run()
+    for (alg, *_), lr, br in zip(cells, loop, batched):
+        _assert_records_equal(alg, lr, br)
+
+
+# -------------------------------------------------------- train parity --
+def test_train_parity_within_1e5():
+    cells = [("fedavg", 2, 2, 1), ("fedprox", 2, 2, 1),
+             ("fedbuff", 2, 2, 1)]
+    kw = dict(max_rounds=3, train=True, eval_every=2)
+    loop = [_sim(*c, **kw).run() for c in cells]
+    batched = BatchedSweep([_sim(*c, **kw) for c in cells],
+                           names=[c[0] for c in cells]).run()
+    for (alg, *_), lr, br in zip(cells, loop, batched):
+        # Timing is training-independent: records stay bitwise even with
+        # gradients on.
+        _assert_records_equal(alg, lr, br)
+        cl = {i: a for i, _, a in lr.accuracy_curve}
+        cb = {i: a for i, _, a in br.accuracy_curve}
+        assert set(cl) == set(cb), (alg, sorted(cl), sorted(cb))
+        for i in cl:
+            assert abs(cl[i] - cb[i]) <= 1e-5, (alg, i, cl[i], cb[i])
+        for leaf_l, leaf_b in zip(jax.tree.leaves(lr.final_params),
+                                  jax.tree.leaves(br.final_params)):
+            np.testing.assert_allclose(np.asarray(leaf_l),
+                                       np.asarray(leaf_b), atol=1e-5,
+                                       rtol=0, err_msg=alg)
+
+
+def test_train_curve_covers_final_round():
+    """The batched executor replays the engine's exit-path eval: every
+    scenario's curve ends at its final recorded round."""
+    cells = [("fedavg", 2, 2, 1), ("fedbuff", 2, 2, 1)]
+    kw = dict(max_rounds=3, train=True, eval_every=100)
+    batched = BatchedSweep([_sim(*c, **kw) for c in cells]).run()
+    for res in batched:
+        assert res.rounds
+        assert res.accuracy_curve[-1][0] == res.rounds[-1].idx
+
+
+# --------------------------------------------------- WindowTable.stack --
+def _table(per_edge_windows, rate=1e6):
+    edges = [_EdgeWindows(np.asarray(s, float), np.asarray(e, float),
+                          np.full(len(s), rate))
+             for s, e in per_edge_windows]
+    return WindowTable.from_edges(edges)
+
+
+def test_stack_first_live_matches_per_table():
+    t1 = _table([([0.0, 100.0], [10.0, 150.0]), ([5.0], [50.0])])
+    t2 = _table([([20.0, 200.0, 300.0], [30.0, 250.0, 350.0])])
+    stacked, offs = WindowTable.stack([t1, t2])
+    assert offs.tolist() == [0, 2, 3]
+    np.testing.assert_array_equal(stacked.counts, [2, 1, 3])
+    ts = np.array([0.0, 12.0, 60.0, 240.0, 1000.0])
+    for off, t in zip(offs, (t1, t2)):
+        for row in range(t.n_edges):
+            got = stacked.first_live(
+                np.full(len(ts), off + row, np.int64), ts)
+            exp = t.first_live(np.full(len(ts), row, np.int64), ts)
+            np.testing.assert_array_equal(got, exp, err_msg=f"row {row}")
+
+
+def test_stack_rejects_mixed_profile_widths():
+    def prof_table(width):
+        e = _EdgeWindows(np.array([0.0]), np.array([100.0]),
+                         np.array([1e6]),
+                         rate_profile=np.full((1, width), 1e6))
+        return WindowTable.from_edges([e])
+    with pytest.raises(ValueError, match="profile widths"):
+        WindowTable.stack([prof_table(3), prof_table(4)])
+
+
+def test_stack_empty_and_single():
+    t = _table([([0.0], [10.0])])
+    stacked, offs = WindowTable.stack([t])
+    assert offs.tolist() == [0, 1]
+    np.testing.assert_array_equal(stacked.starts, t.starts)
+
+
+# ------------------------------------------------------------ guardrails --
+def test_rejects_empty_batch():
+    with pytest.raises(ValueError, match="at least one"):
+        BatchedSweep([])
+
+
+def test_rejects_record_params():
+    sim = _sim("fedavg", 2, 2, 1, max_rounds=2, train=True,
+               record_params=True)
+    with pytest.raises(ValueError, match="record_params"):
+        BatchedSweep([sim])
+
+
+def test_rejects_mesh_execution():
+    sim = _sim("fedavg", 2, 2, 1, max_rounds=2, train=False)
+    sim.execution = "mesh"
+    with pytest.raises(ValueError, match="mesh"):
+        BatchedSweep([sim])
+
+
+def test_rejects_mixed_training_knobs():
+    a = _sim("fedavg", 2, 2, 1, max_rounds=2, train=False)
+    b = _sim("fedprox", 2, 2, 1, max_rounds=2, train=False, lr=0.5)
+    with pytest.raises(ValueError, match="lr/batch_size"):
+        BatchedSweep([a, b])

@@ -1,0 +1,94 @@
+"""Regression tests: runs that exit off the eval cadence still evaluate
+the final model, so `accuracy_curve[-1]` always reflects `final_params`.
+
+Pre-fix, `_run_sync` only hit the eval slot on the cadence or at
+`r == max_rounds - 1`, so every horizon-truncated run (all 90-day paper
+scenarios) and every windows-exhausted run reported a curve ending
+rounds before the final aggregation; `_run_async` had the same gap when
+the event heap drained."""
+import numpy as np
+
+from repro.core import ALGORITHMS
+from repro.orbits import WalkerStar, compute_access_windows, station_subnetwork
+from repro.orbits.access import AccessWindows
+from repro.sim import ConstellationSim, SimConfig
+
+_HORIZON = 8 * 86400.0
+_AW = {}
+
+
+def _aw(cl, sp, g):
+    key = (cl, sp, g)
+    if key not in _AW:
+        _AW[key] = compute_access_windows(
+            WalkerStar(cl, sp), station_subnetwork(g), horizon_s=_HORIZON)
+    return _AW[key]
+
+
+def _synthetic_aw(per_sat_windows, horizon_s=1e6):
+    """Hand-built AccessWindows: one (starts, ends) pair per satellite."""
+    per_sat = [(np.asarray(s, float), np.asarray(e, float))
+               for s, e in per_sat_windows]
+    return AccessWindows(per_sat=per_sat,
+                         per_sat_station=[[w] for w in per_sat],
+                         cluster=np.zeros(len(per_sat), np.int64),
+                         horizon_s=horizon_s, dt_s=1.0)
+
+
+def _assert_curve_ends_at_final_round(res):
+    assert len(res.rounds) >= 2, "exit fired before the gap could show"
+    last = res.rounds[-1]
+    # Pre-fix the curve ended at the last *cadence* round (round 0 here,
+    # with the off-cadence eval_every below), not the final aggregation.
+    assert res.accuracy_curve, "trained run produced no curve"
+    assert res.accuracy_curve[-1][0] == last.idx
+    assert last.accuracy is not None
+
+
+def test_sync_horizon_truncation_evaluates_final_model():
+    c = WalkerStar(1, 4)
+    alg = ALGORITHMS["fedavg"]
+    timing = ConstellationSim(
+        c, station_subnetwork(1), alg,
+        cfg=SimConfig(max_rounds=6, horizon_s=_HORIZON, train=False,
+                      eval_every=100),
+        access=_aw(1, 4, 1), workload="femnist_mlp").run()
+    assert len(timing.rounds) >= 3
+    # A horizon just past round 2's end truncates the run mid-cadence
+    # (round 3 plans past it -> aborted="horizon").
+    horizon = timing.rounds[2].t_end + 1.0
+    res = ConstellationSim(
+        c, station_subnetwork(1), alg,
+        cfg=SimConfig(max_rounds=6, horizon_s=horizon, train=True,
+                      eval_every=100),
+        access=_aw(1, 4, 1), workload="femnist_mlp").run()
+    assert len(res.rounds) == 3
+    _assert_curve_ends_at_final_round(res)
+
+
+def test_sync_no_plans_exit_evaluates_final_model():
+    # Three passes per satellite: round 0 downloads in pass 0 and returns
+    # in pass 1, round 1 in passes 1/2; round 2 finds no return window
+    # -> aborted="no_plans" with 2 recorded rounds, neither on cadence
+    # except round 0.
+    windows = [([0.0, 1000.0, 2000.0], [100.0, 1100.0, 2100.0])] * 2
+    res = ConstellationSim(
+        WalkerStar(1, 2), station_subnetwork(1), ALGORITHMS["fedavg"],
+        cfg=SimConfig(max_rounds=50, horizon_s=1e6, train=True,
+                      eval_every=100),
+        access=_synthetic_aw(windows), workload="femnist_mlp").run()
+    _assert_curve_ends_at_final_round(res)
+
+
+def test_async_drained_heap_evaluates_final_model():
+    # Four passes per satellite support three upload cycles each; after
+    # the last upload no further window exists, the heap drains, and the
+    # FedBuff loop exits off-cadence.
+    windows = [([0.0, 1000.0, 2000.0, 3000.0],
+                [100.0, 1100.0, 2100.0, 3100.0])] * 2
+    res = ConstellationSim(
+        WalkerStar(1, 2), station_subnetwork(1), ALGORITHMS["fedbuff"],
+        cfg=SimConfig(max_rounds=50, horizon_s=1e6, train=True,
+                      eval_every=100),
+        access=_synthetic_aw(windows), workload="femnist_mlp").run()
+    _assert_curve_ends_at_final_round(res)

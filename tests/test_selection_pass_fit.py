@@ -1,0 +1,80 @@
+"""Regression tests: the download-fit check in `selection._plan_prefix`
+re-validates every pass it slides to.
+
+Pre-fix, a download that didn't fit its first pass slid to the next one
+WITHOUT re-checking `rx_end > end` — under LinkBudget fading a chain of
+short passes silently planned a download overrunning its window. The fix
+loops the check with a bounded retry (`MAX_PASS_SLIDES`) and drops the
+candidate when every retry is exhausted."""
+import numpy as np
+
+from repro.comms import ConstantRate, build_contact_plan
+from repro.core import selection
+from repro.core.selection import _plan_prefix
+from repro.core.strategies.base import Strategy
+
+# Soft lookup so the pre-fix code (no retry bound) fails these tests on
+# the planning assertions, not at import time.
+MAX_PASS_SLIDES = getattr(selection, "MAX_PASS_SLIDES", 8)
+from repro.core.timing import HardwareModel
+from repro.orbits.access import AccessWindows
+
+# 10 Mbytes over an 8 Mbps link: tx_time_s = 10 s exactly.
+HW = HardwareModel(model_bytes=10_000_000, link_mbps=8.0)
+
+
+def _aw(starts, ends, horizon_s=1e6):
+    per_sat = [(np.asarray(starts, float), np.asarray(ends, float))]
+    return AccessWindows(per_sat=per_sat,
+                         per_sat_station=[[per_sat[0]]],
+                         cluster=np.zeros(1, np.int64),
+                         horizon_s=horizon_s, dt_s=1.0)
+
+
+def _short_pass_chain(n):
+    """n consecutive 5-second passes (each too short for the 10 s
+    download) followed by nothing."""
+    starts = [100.0 * i for i in range(n)]
+    ends = [100.0 * i + 5.0 for i in range(n)]
+    return starts, ends
+
+
+def test_access_windows_second_pass_too_short_slides_again():
+    # Pass 0 (5 s) and pass 1 (4 s) are both too short; pass 2 fits.
+    aw = _aw([0.0, 100.0, 200.0], [5.0, 104.0, 400.0])
+    px = _plan_prefix(0, 0.0, aw, Strategy(), HW, 5, 0)
+    assert px is not None
+    rx_start, rx_end = px[0], px[1]
+    # Pre-fix: the slide landed on pass 1 unchecked -> rx_end 110 > 104.
+    assert rx_start == 200.0
+    assert rx_end == 210.0
+
+
+def test_access_windows_exhausted_retries_drop_candidate():
+    starts, ends = _short_pass_chain(MAX_PASS_SLIDES + 3)
+    assert _plan_prefix(0, 0.0, _aw(starts, ends), Strategy(), HW,
+                        5, 0) is None
+
+
+def test_contact_plan_second_pass_too_short_slides_again():
+    aw = _aw([0.0, 100.0, 200.0], [5.0, 104.0, 400.0])
+    plan = build_contact_plan(aw, None, ConstantRate(8.0))
+    px = _plan_prefix(0, 0.0, aw, Strategy(), HW, 5, 0, plan=plan)
+    assert px is not None
+    assert px[0] == 200.0
+    assert px[1] == 210.0
+
+
+def test_contact_plan_exhausted_retries_drop_candidate():
+    starts, ends = _short_pass_chain(MAX_PASS_SLIDES + 3)
+    plan = build_contact_plan(_aw(starts, ends), None, ConstantRate(8.0))
+    assert _plan_prefix(0, 0.0, _aw(starts, ends), Strategy(), HW,
+                        5, 0, plan=plan) is None
+
+
+def test_fitting_first_pass_is_unchanged():
+    # The common case (no slide) must stay bitwise identical.
+    aw = _aw([50.0, 300.0], [200.0, 500.0])
+    px = _plan_prefix(0, 0.0, aw, Strategy(), HW, 5, 0)
+    assert px is not None
+    assert px[0] == 50.0 and px[1] == 60.0
