@@ -55,13 +55,25 @@ def run(rounds: int = 20, quick: bool = False, isl: bool = False,
         horizon_s: float = HORIZON_S, workload: str | None = None,
         train: bool = False, execution: str | None = None,
         link_model: str | None = None, smoke: bool = False,
-        batched: bool = False):
+        batched: bool = False, algorithms: tuple[str, ...] | None = None):
     if batched and execution:
         raise ValueError("--batched is its own vmapped executor; "
                          "--execution selects the loop path's")
-    algs = ALG_SUITE[:4] if quick else ALG_SUITE
-    if isl:
-        algs = algs + ISL_SUITE
+    if algorithms:
+        # Validate the whole list up front: an unknown name must fail
+        # here with the registry's vocabulary, not rounds deep into the
+        # sweep as a bare KeyError.
+        from repro.core import ALGORITHMS, algorithm_names
+        unknown = sorted(a for a in algorithms if a not in ALGORITHMS)
+        if unknown:
+            raise ValueError(
+                f"unknown algorithm(s) {unknown}; registered algorithms: "
+                f"{algorithm_names()}")
+        algs = tuple(algorithms)
+    else:
+        algs = ALG_SUITE[:4] if quick else ALG_SUITE
+        if isl:
+            algs = algs + ISL_SUITE
     clusters = (2, 10) if quick else CLUSTERS
     sats = (2, 10) if quick else SATS_PER_CLUSTER
     stations = (1, 13) if quick else STATIONS
@@ -69,8 +81,12 @@ def run(rounds: int = 20, quick: bool = False, isl: bool = False,
         # Single-scenario smoke (CI's per-workload cost-model guard):
         # one algorithm — plus one ISL variant when --isl is on, so
         # relay feasibility vs model bytes is pinned too — on the 2x2
-        # constellation, one station.
-        algs = algs[:1] + tuple(a for a in algs if a.endswith("_isl"))[:1]
+        # constellation, one station. An explicit --algorithms list is
+        # kept whole (CI smokes the named strategies, just on the
+        # smallest scenario).
+        if not algorithms:
+            algs = (algs[:1]
+                    + tuple(a for a in algs if a.endswith("_isl"))[:1])
         clusters, sats, stations = (2,), (2,), (1,)
     # Non-default workloads re-price every scenario (model bytes / epoch
     # FLOPs from the workload's derived cost model) and tag the row names.
@@ -136,6 +152,10 @@ def main(argv=None):
                          "cost-model guard)")
     ap.add_argument("--isl", action="store_true",
                     help="add the ISL-enabled *_intracc_isl variants")
+    ap.add_argument("--algorithms", default=None, metavar="A,B,...",
+                    help="comma-separated registry algorithm names to "
+                         "sweep instead of the built-in suite; unknown "
+                         "names error up front listing the registry")
     ap.add_argument("--horizon-days", type=float, default=None,
                     help="override the 90-day scenario (smoke/CI runs)")
     ap.add_argument("--workload", default=None, choices=workload_names(),
@@ -171,6 +191,17 @@ def main(argv=None):
                  "selects the loop path's (host/mesh)")
     if args.trace_jsonl and not args.trace:
         ap.error("--trace-jsonl requires --trace (one tracer, two views)")
+    algorithms = None
+    if args.algorithms:
+        algorithms = tuple(
+            a.strip() for a in args.algorithms.split(",") if a.strip())
+        if not algorithms:
+            ap.error("--algorithms got an empty list")
+        from repro.core import ALGORITHMS, algorithm_names
+        unknown = sorted(a for a in algorithms if a not in ALGORITHMS)
+        if unknown:
+            ap.error(f"unknown algorithm(s) {unknown}; registered "
+                     f"algorithms: {algorithm_names()}")
     horizon_s = (args.horizon_days * 86400.0 if args.horizon_days
                  else HORIZON_S)
     if args.trace:
@@ -180,7 +211,7 @@ def main(argv=None):
              horizon_s=horizon_s, workload=args.workload,
              train=args.train, execution=args.execution,
              link_model=args.link_model, smoke=args.smoke,
-             batched=args.batched))
+             batched=args.batched, algorithms=algorithms))
     if args.trace:
         summary = obs.metrics_summary()
         obs.write_chrome_trace(args.trace)

@@ -193,14 +193,17 @@ def generate_scale_suite() -> dict:
 def generate_batched_suite() -> dict:
     """Batched-vs-loop parity suite (`repro.sim.batched`).
 
-    Three passes, all deterministic simulated quantities (DRIFT-gated):
+    Four passes, all deterministic simulated quantities (DRIFT-gated):
 
       1. the quick trend grid on the loop path (per-cell sim runs);
       2. the SAME grid as one `BatchedSweep` — the per-row match count is
          the committed parity claim (timing rows are bitwise);
       3. a small --train parity slice (fedavg / fedprox / fedbuff): round
          durations ride the baseline both ways, and `acc_match` pins the
-         accuracy curves to the loop path within 1e-5.
+         accuracy curves to the loop path within 1e-5;
+      4. the connectivity-aware strategies (fedspace / ground_assisted /
+         fedprox_sparse) on the smoke cell, loop vs batched: per-algorithm
+         duration rows plus their own parity count.
 
     The wall breakdowns of passes 1 and 2 are snapshotted separately
     (`wall_breakdown_loop` vs `wall_breakdown_batched`) — the committed
@@ -263,6 +266,28 @@ def generate_batched_suite() -> dict:
                      f"rounds={len(br.rounds)}"))
         rows.append((f"batched/train/{alg}/acc_match",
                      int(err <= 1e-5), f"maxerr={err:.2e}"))
+
+    # Connectivity-aware strategies (fedspace / ground_assisted /
+    # fedprox_sparse): the smoke cell on the loop path and as a
+    # BatchedSweep. Their per-algorithm round durations are DRIFT-gated
+    # in both directions — these strategies own their round timing, so
+    # any movement is a scheduling behaviour change — and the parity
+    # count pins the batched executor's scalar-twin fallback for
+    # custom-hook strategies.
+    conn = ("fedspace", "ground_assisted", "fedprox_sparse")
+    conn_knobs = dict(rounds=TREND_ROUNDS, smoke=True, algorithms=conn,
+                      horizon_s=TREND_HORIZON_DAYS * 86400.0)
+    conn_loop = bench_sweep.run(**conn_knobs)
+    conn_batched = bench_sweep.run(batched=True, **conn_knobs)
+    cmap = {r[0]: tuple(r[1:]) for r in conn_batched}
+    n_conn = sum(1 for r in conn_loop if cmap.get(r[0]) == tuple(r[1:]))
+    rows.append(("batched/strategy/timing_parity_rows", n_conn,
+                 f"of={len(conn_loop)}"))
+    for r in conn_loop:
+        if r[0].endswith("scenarios_run"):
+            continue
+        alg = r[0].split("/")[1]
+        rows.append((f"batched/strategy/{alg}/duration", r[1], r[2]))
     if fresh:
         obs.disable()
     return {"rounds": TREND_ROUNDS,

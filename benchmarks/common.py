@@ -22,7 +22,7 @@ from repro.comms import (                                           # noqa: E402
     build_contact_plan,
     compute_isl_windows,
 )
-from repro.core import ALGORITHMS, get_workload                     # noqa: E402
+from repro.core import ALGORITHMS, get_algorithm, get_workload      # noqa: E402
 from repro.core.timing import HardwareModel                         # noqa: E402
 from repro.obs import count, span                                   # noqa: E402
 from repro.orbits import (                                          # noqa: E402
@@ -222,7 +222,7 @@ def make_scenario_sim(alg, clusters, sats, n_stations, *, rounds, train,
     the loop path calls `.run()` on it; the batched path stacks many."""
     c = WalkerStar(clusters, sats)
     aw = access(clusters, sats, n_stations, horizon_s)
-    algorithm = ALGORITHMS[alg]
+    algorithm = get_algorithm(alg)
     if isinstance(link_model, str):
         if link_model not in ("constant", "budget"):
             raise ValueError(f"unknown link_model {link_model!r}; "

@@ -41,29 +41,31 @@ from benchmarks.common import emit
 
 from repro import obs  # noqa: E402  (benchmarks.common puts src/ on path)
 
-# Every suite takes (full, execution, link_model, workload); suites that
-# never run gradients ignore the execution axis (it only changes how
-# gradients run), only the Table-1 sweep carries the link-model axis (it
-# owns the comms-pricing claims), and the workload axis re-prices the
-# sweep/accuracy suites for a registry workload (e.g. the LM suite:
-# lm_tiny / lm_moe_tiny / lm_rwkv6_tiny / lm_hybrid_tiny). The sweep is
-# timing-only by default, so requesting an execution mode switches it to
-# real training (otherwise the rows would be mislabelled host numbers).
+# Every suite takes (full, execution, link_model, workload, algorithms);
+# suites that never run gradients ignore the execution axis (it only
+# changes how gradients run), only the Table-1 sweep carries the
+# link-model axis (it owns the comms-pricing claims) and the algorithms
+# axis (an explicit registry-name list replacing its built-in suite),
+# and the workload axis re-prices the sweep/accuracy suites for a
+# registry workload (e.g. the LM suite: lm_tiny / lm_moe_tiny /
+# lm_rwkv6_tiny / lm_hybrid_tiny). The sweep is timing-only by default,
+# so requesting an execution mode switches it to real training
+# (otherwise the rows would be mislabelled host numbers).
 SUITES = {
-    "kernels": lambda full, ex, lm, wl: bench_kernels.run(),
-    "round_duration": lambda full, ex, lm, wl: bench_round_duration.run(
+    "kernels": lambda full, ex, lm, wl, al: bench_kernels.run(),
+    "round_duration": lambda full, ex, lm, wl, al: bench_round_duration.run(
         quick=not full),
-    "idle": lambda full, ex, lm, wl: bench_idle.run(quick=not full),
-    "speedup": lambda full, ex, lm, wl: bench_speedup.run(
+    "idle": lambda full, ex, lm, wl, al: bench_idle.run(quick=not full),
+    "speedup": lambda full, ex, lm, wl, al: bench_speedup.run(
         train=True, rounds=150 if full else 100, execution=ex),
-    "accuracy": lambda full, ex, lm, wl: bench_accuracy.run(
+    "accuracy": lambda full, ex, lm, wl, al: bench_accuracy.run(
         quick=not full, rounds=150 if full else 100, execution=ex,
         workload=wl),
-    "sweep768": lambda full, ex, lm, wl: bench_sweep.run(
+    "sweep768": lambda full, ex, lm, wl, al: bench_sweep.run(
         quick=not full, train=ex is not None, execution=ex,
-        link_model=lm, workload=wl),
-    "scale": lambda full, ex, lm, wl: bench_scale.run(quick=not full),
-    "roofline": lambda full, ex, lm, wl: bench_roofline.run(),
+        link_model=lm, workload=wl, algorithms=al),
+    "scale": lambda full, ex, lm, wl, al: bench_scale.run(quick=not full),
+    "roofline": lambda full, ex, lm, wl, al: bench_roofline.run(),
 }
 
 DEFAULT_JSON = os.path.join(os.path.dirname(__file__), "..",
@@ -104,11 +106,25 @@ def main(argv=None) -> None:
                     help="re-price the sweep/accuracy suites for a "
                          "registry workload (default: the seed's "
                          "femnist_mlp constants)")
+    ap.add_argument("--algorithms", default=None, metavar="A,B,...",
+                    help="comma-separated registry algorithm names for "
+                         "the Table-1 sweep (replaces its built-in "
+                         "suite; unknown names error up front)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="write the full Chrome/Perfetto trace of the run "
                          "(per-suite wall breakdowns land in the artifact "
                          "regardless)")
     args = ap.parse_args(argv)
+
+    algorithms = None
+    if args.algorithms:
+        algorithms = tuple(
+            a.strip() for a in args.algorithms.split(",") if a.strip())
+        from repro.core import ALGORITHMS, algorithm_names
+        unknown = sorted(a for a in algorithms if a not in ALGORITHMS)
+        if unknown:
+            ap.error(f"unknown algorithm(s) {unknown}; registered "
+                     f"algorithms: {algorithm_names()}")
 
     # The harness owns wall-clock telemetry: tracing is always on here
     # (it only observes walls; metric rows are simulation-time values and
@@ -128,7 +144,7 @@ def main(argv=None) -> None:
         spans0 = _span_totals()
         try:
             rows = SUITES[name](args.full, args.execution, args.link_model,
-                                args.workload)
+                                args.workload, algorithms)
             emit(rows)
             wall = time.perf_counter() - t0
             print(f"# {name}: {len(rows)} rows in {wall:.1f}s")

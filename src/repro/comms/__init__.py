@@ -18,6 +18,7 @@ communications layer, in four pieces:
 variants (`*_isl`) that `repro.sim.engine` executes.
 """
 from repro.comms.contact_plan import (
+    ContactOutlook,
     ContactPlan,
     ContactWindow,
     build_contact_plan,
@@ -41,6 +42,7 @@ __all__ = [
     "DEFAULT_ISL_MAX_RANGE_KM",
     "compute_isl_windows",
     "isl_visibility_grid",
+    "ContactOutlook",
     "ContactPlan",
     "ContactWindow",
     "build_contact_plan",

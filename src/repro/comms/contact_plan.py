@@ -439,6 +439,100 @@ class WindowTable:
                    _profile_times=prof_t), offsets
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class ContactOutlook:
+    """Read-only schedule view handed to strategy scheduling hooks.
+
+    Strategies deciding *when* to aggregate (`Strategy.should_flush`) or
+    where the next round's clock starts (`Strategy.next_sync_point`)
+    need the upcoming contact schedule — which satellites see a ground
+    station next, and when — without mutable access to the plan or the
+    engine. This wraps the padded `WindowTable`s in a handful of
+    point-in-time queries over the *future* (binary-searched
+    `first_live`, never a scan), so hook calls stay O(log W) per
+    satellite regardless of horizon length.
+
+    Built once per engine run: from the scenario's `ContactPlan` when
+    one exists (`from_plan`, ground + ISL tables) or straight from
+    `AccessWindows` on the plan-free path (`from_access`, ground only).
+    """
+
+    ground: WindowTable
+    isl: WindowTable | None = None
+    edge_index: dict | None = None     # (i, j) i<j -> row in `isl`
+    horizon_s: float = float("inf")
+
+    @classmethod
+    def from_plan(cls, plan: "ContactPlan") -> "ContactOutlook":
+        tables = plan.tables()
+        return cls(ground=tables.ground, isl=tables.isl,
+                   edge_index=tables.edge_index, horizon_s=plan.horizon_s)
+
+    @classmethod
+    def from_access(cls, aw: AccessWindows,
+                    rate_bps: float = MIN_RATE_BPS) -> "ContactOutlook":
+        """Outlook over merged per-satellite ground passes. `rate_bps`
+        is informational (the AccessWindows path prices transfers with
+        the flat hardware tx time, not per-window rates)."""
+        edges = [_EdgeWindows(np.asarray(s, float), np.asarray(e, float),
+                              np.full(len(s), float(rate_bps)))
+                 for s, e in aw.per_sat]
+        return cls(ground=WindowTable.from_edges(edges),
+                   horizon_s=aw.horizon_s)
+
+    @property
+    def n_sats(self) -> int:
+        return self.ground.n_edges
+
+    def next_ground_pass(self, k: int, t: float
+                         ) -> tuple[float, float] | None:
+        """Earliest ground pass of satellite `k` live at-or-after `t`,
+        truncated to `t` (`AccessWindows.next_window` semantics)."""
+        wt = self.ground
+        i = int(wt.first_live(np.array([k]), np.array([float(t)]))[0])
+        if i >= int(wt.counts[k]):
+            return None
+        return (max(float(wt.starts[k, i]), t), float(wt.ends[k, i]))
+
+    def ground_gap_s(self, k: int, t: float) -> float | None:
+        """Seconds from `t` until satellite `k` next sees a station
+        (0.0 inside a pass); None when no pass remains."""
+        w = self.next_ground_pass(k, t)
+        return None if w is None else w[0] - t
+
+    def next_contact_s(self, t: float, ks=None) -> float | None:
+        """Earliest instant any satellite (of `ks`, default all) is in
+        ground contact at-or-after `t` — `t` itself when a pass is
+        already live. None when the schedule is exhausted."""
+        wt = self.ground
+        rows = (np.arange(wt.n_edges) if ks is None
+                else np.asarray(list(ks), np.int64))
+        if len(rows) == 0:
+            return None
+        i = wt.first_live(rows, np.full(len(rows), float(t)))
+        ok = i < wt.counts[rows]
+        if not ok.any():
+            return None
+        starts = np.maximum(wt.starts[rows, np.where(ok, i, 0)], float(t))
+        return float(starts[ok].min())
+
+    def next_isl_window(self, i: int, j: int, t: float
+                        ) -> tuple[float, float] | None:
+        """Earliest ISL window on edge (i, j) live at-or-after `t`;
+        None without ISL tables or when the edge's schedule is done."""
+        if self.isl is None or self.edge_index is None:
+            return None
+        row = self.edge_index.get((min(i, j), max(i, j)))
+        if row is None:
+            return None
+        w = int(self.isl.first_live(np.array([row]),
+                                    np.array([float(t)]))[0])
+        if w >= int(self.isl.counts[row]):
+            return None
+        return (max(float(self.isl.starts[row, w]), t),
+                float(self.isl.ends[row, w]))
+
+
 @dataclasses.dataclass
 class PlanTables:
     """Array-shaped view of one `ContactPlan`: the ground/ISL window

@@ -3,19 +3,33 @@
 `repro.core` turns any terrestrial FL strategy into an orbital one by
 composing three pieces (paper section 3):
 
-  1. a `Strategy` (FedAvgSat / FedProxSat / FedBuffSat) — the aggregation
-     math and the client-update regime, as pure JAX;
+  1. a `Strategy` (FedAvgSat / FedProxSat / FedBuffSat / the
+     connectivity-aware extensions) — the aggregation math, the
+     client-update regime, and the scheduling hooks, as pure JAX plus
+     host-side planning;
   2. a `Selector` — training/eval-stage client selection driven by orbital
      access windows (base contact-order, FLSchedule, FLIntraCC);
-  3. round-completion semantics — synchronous barrier or buffered async.
+  3. round-completion semantics — dispatched through the strategy's
+     `admit` / `should_flush` / `next_sync_point` hooks by the engine's
+     event loop (sync barrier and buffered async are the defaults).
 
 The constellation simulator in `repro.sim` executes the composed algorithm
-against real orbital geometry and real gradient updates.
+against real orbital geometry and real gradient updates. `ALGORITHMS` is
+an open registry: `register_algorithm()` adds entries, `get_algorithm()`
+resolves names with a listing on error.
 """
-from repro.core.strategies.base import Strategy, ClientWorkMode
+from repro.core.strategies.base import (
+    BufferState,
+    ClientWorkMode,
+    PendingUpdate,
+    Strategy,
+)
 from repro.core.strategies.fedavg import FedAvgSat
 from repro.core.strategies.fedprox import FedProxSat
 from repro.core.strategies.fedbuff import FedBuffSat
+from repro.core.strategies.fedspace import FedSpaceSat
+from repro.core.strategies.ground_assisted import GroundAssistedSat
+from repro.core.strategies.sparse import sparse_variant
 from repro.core.selection import (
     BaseSelector,
     ScheduleSelector,
@@ -26,6 +40,9 @@ from repro.core.spaceify import (
     ALGORITHMS,
     TABLE1_ALGORITHMS,
     SpaceifiedAlgorithm,
+    algorithm_names,
+    get_algorithm,
+    register_algorithm,
     spaceify,
 )
 from repro.core.workload import (
@@ -41,9 +58,14 @@ from repro.core.workload import (
 __all__ = [
     "Strategy",
     "ClientWorkMode",
+    "BufferState",
+    "PendingUpdate",
     "FedAvgSat",
     "FedProxSat",
     "FedBuffSat",
+    "FedSpaceSat",
+    "GroundAssistedSat",
+    "sparse_variant",
     "BaseSelector",
     "ScheduleSelector",
     "IntraCCSelector",
@@ -52,6 +74,9 @@ __all__ = [
     "spaceify",
     "ALGORITHMS",
     "TABLE1_ALGORITHMS",
+    "algorithm_names",
+    "get_algorithm",
+    "register_algorithm",
     "Workload",
     "get_workload",
     "lm_inactive_params",

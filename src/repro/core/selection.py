@@ -250,6 +250,10 @@ class BaseSelector:
         min_epochs: int = 0,
         plan: ContactPlan | None = None,
     ) -> list[ClientPlan]:
+        # Sparse-participation strategies shrink the nominal selection
+        # budget here, so every consumer (round loop, eval-stage
+        # selection, batched lockstep planner) agrees on the round size.
+        c = strategy.round_size(c)
         plans = []
         if plan is not None:
             # One batched routing call for the whole round instead of one

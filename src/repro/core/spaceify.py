@@ -1,27 +1,39 @@
 """spaceify(): compose a terrestrial strategy with orbital selection.
 
 This is the paper's headline API. A `SpaceifiedAlgorithm` bundles
-  strategy  (aggregation math + client regime)
+  strategy  (aggregation math + client regime + scheduling hooks)
   selector  (training-stage AND evaluation-stage client selection)
   knobs     (local epochs E, min-epoch floor, buffer size D)
 and is what `repro.sim.engine.ConstellationSim` executes.
 
-`ALGORITHMS` registers the paper's full Table-1 suite (8 variants) plus
-the ISL-enabled extensions (`*_isl`): passing `isl=True` marks the
-algorithm as planning against a `repro.comms.ContactPlan`, so relayed
-parameter returns are routed store-and-forward over real inter-satellite
-links (paying transfer time + contact wait) instead of the seed's free
-instantaneous hand-off. `TABLE1_ALGORITHMS` is the paper-exact subset.
+`ALGORITHMS` is an *open registry*. The built-in suite — the paper's
+full Table-1 variants (8), the ISL-enabled extensions (`*_isl`), and
+the connectivity-aware strategies from the related work (`fedspace`,
+`ground_assisted`, `fedprox_sparse`) — is constructed lazily on first
+lookup; `register_algorithm()` adds new entries (duplicate names
+refused unless `overwrite=True`), and `get_algorithm()` resolves a name
+with an error that lists the registered keys instead of a bare
+KeyError. `TABLE1_ALGORITHMS` is the paper-exact subset, pinned by
+name.
+
+Passing `isl=True` marks an algorithm as planning against a
+`repro.comms.ContactPlan`, so relayed parameter returns are routed
+store-and-forward over real inter-satellite links (paying transfer time
++ contact wait) instead of the seed's free instantaneous hand-off.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Iterator, Mapping
 
 from repro.core.selection import BaseSelector, IntraCCSelector, ScheduleSelector
 from repro.core.strategies.base import Strategy
 from repro.core.strategies.fedavg import FedAvgSat
 from repro.core.strategies.fedbuff import FedBuffSat
 from repro.core.strategies.fedprox import FedProxSat
+from repro.core.strategies.fedspace import FedSpaceSat
+from repro.core.strategies.ground_assisted import GroundAssistedSat
+from repro.core.strategies.sparse import sparse_variant
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +45,28 @@ class SpaceifiedAlgorithm:
     min_epochs: int = 0        # SchedV2 floor (UNTIL_CONTACT regime)
     buffer_frac: float = 1.0   # FedBuff: D = max(1, round(buffer_frac * c))
     isl: bool = False          # plan against an ISL-aware ContactPlan
+
+    def __post_init__(self):
+        # Knob validation at construction: a bad knob otherwise
+        # surfaces rounds deep in a sweep as a shape error or a
+        # silently empty buffer.
+        if not 0.0 < self.buffer_frac <= 1.0:
+            raise ValueError(
+                f"algorithm {self.name!r}: buffer_frac must be in (0, 1], "
+                f"got {self.buffer_frac}")
+        if self.min_epochs < 0:
+            raise ValueError(
+                f"algorithm {self.name!r}: min_epochs must be >= 0, "
+                f"got {self.min_epochs}")
+        if self.local_epochs < 1:
+            raise ValueError(
+                f"algorithm {self.name!r}: local_epochs must be >= 1, "
+                f"got {self.local_epochs}")
+        if not self.strategy.synchronous and self.strategy.max_staleness < 0:
+            raise ValueError(
+                f"algorithm {self.name!r}: async strategy "
+                f"{self.strategy.name!r} needs max_staleness >= 0, "
+                f"got {self.strategy.max_staleness}")
 
     @property
     def synchronous(self) -> bool:
@@ -73,10 +107,18 @@ def spaceify(strategy: Strategy, *, schedule: bool = False,
     )
 
 
-def _suite() -> dict[str, SpaceifiedAlgorithm]:
-    """The paper's Table-1 suite + ISL-enabled extensions."""
+# The paper-exact Table-1 names (no ISL extensions, no related-work
+# strategies) — pinned explicitly so growing the registry never leaks
+# into the paper-reproduction subset.
+TABLE1_NAMES = ("fedavg", "fedavg_sched", "fedavg_intracc",
+                "fedprox", "fedprox_sched", "fedprox_sched_v2",
+                "fedprox_intracc", "fedbuff")
+
+
+def _builtin_suite() -> list[SpaceifiedAlgorithm]:
+    """Table-1 suite + ISL extensions + connectivity-aware strategies."""
     fedavg, fedprox, fedbuff = FedAvgSat(), FedProxSat(), FedBuffSat()
-    algs = [
+    return [
         spaceify(fedavg),
         spaceify(fedavg, schedule=True),
         spaceify(fedavg, intracc=True),
@@ -88,13 +130,96 @@ def _suite() -> dict[str, SpaceifiedAlgorithm]:
         # ISL extensions: the relay hand-off priced by the comms subsystem.
         spaceify(fedavg, intracc=True, isl=True),
         spaceify(fedprox, intracc=True, isl=True),
+        # Connectivity-aware strategies (ROADMAP / related work):
+        # schedule-aware flush timing, per-visit ground aggregation, and
+        # a half-participation edge variant.
+        spaceify(FedSpaceSat(), buffer_frac=0.5),
+        spaceify(GroundAssistedSat()),
+        spaceify(sparse_variant(FedProxSat(), 0.5)),
     ]
-    return {a.name: a for a in algs}
 
 
-ALGORITHMS: dict[str, SpaceifiedAlgorithm] = _suite()
+class AlgorithmRegistry(Mapping):
+    """Open, lazily-built name -> `SpaceifiedAlgorithm` registry.
 
-# The paper-exact Table-1 subset (no ISL extensions).
-TABLE1_ALGORITHMS: dict[str, SpaceifiedAlgorithm] = {
-    n: a for n, a in ALGORITHMS.items() if not a.isl
-}
+    Reads like a plain dict (`ALGORITHMS[name]`, `in`, iteration);
+    lookups of unknown names raise a KeyError that lists the sorted
+    registered keys. The built-in suite is constructed on first access,
+    so importing `repro.core` never pays selector/strategy construction
+    for code that only registers its own algorithms.
+    """
+
+    def __init__(self, factory):
+        self._factory = factory
+        self._algs: dict[str, SpaceifiedAlgorithm] | None = None
+
+    def _ensure(self) -> dict[str, SpaceifiedAlgorithm]:
+        if self._algs is None:
+            self._algs = {}
+            for alg in self._factory():
+                self.register(alg)
+        return self._algs
+
+    def register(self, alg: SpaceifiedAlgorithm, *,
+                 overwrite: bool = False) -> SpaceifiedAlgorithm:
+        algs = self._ensure()
+        if alg.name in algs and not overwrite:
+            raise ValueError(
+                f"algorithm {alg.name!r} is already registered; pass "
+                "overwrite=True to replace it")
+        algs[alg.name] = alg
+        return alg
+
+    def __getitem__(self, name: str) -> SpaceifiedAlgorithm:
+        algs = self._ensure()
+        try:
+            return algs[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown algorithm {name!r}; registered algorithms: "
+                f"{sorted(algs)}") from None
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._ensure())
+
+    def __len__(self) -> int:
+        return len(self._ensure())
+
+
+ALGORITHMS = AlgorithmRegistry(_builtin_suite)
+
+
+def register_algorithm(alg: SpaceifiedAlgorithm, *,
+                       overwrite: bool = False) -> SpaceifiedAlgorithm:
+    """Add `alg` to the open registry (duplicate names refused unless
+    `overwrite=True`). Returns `alg` so registration can inline."""
+    return ALGORITHMS.register(alg, overwrite=overwrite)
+
+
+def get_algorithm(name: str) -> SpaceifiedAlgorithm:
+    """Resolve a registry name; unknown names raise a KeyError listing
+    the sorted registered keys (never a bare deep-sweep KeyError)."""
+    return ALGORITHMS[name]
+
+
+def algorithm_names() -> list[str]:
+    """Sorted names of every registered algorithm."""
+    return sorted(ALGORITHMS)
+
+
+class _Table1View(Mapping):
+    """Lazy paper-exact subset of `ALGORITHMS` (by pinned name)."""
+
+    def __getitem__(self, name: str) -> SpaceifiedAlgorithm:
+        if name not in TABLE1_NAMES:
+            raise KeyError(name)
+        return ALGORITHMS[name]
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(TABLE1_NAMES)
+
+    def __len__(self) -> int:
+        return len(TABLE1_NAMES)
+
+
+TABLE1_ALGORITHMS: Mapping = _Table1View()

@@ -1,6 +1,16 @@
-from repro.core.strategies.base import Strategy, ClientWorkMode
+from repro.core.strategies.base import (
+    BufferState,
+    ClientWorkMode,
+    PendingUpdate,
+    Strategy,
+)
 from repro.core.strategies.fedavg import FedAvgSat
 from repro.core.strategies.fedprox import FedProxSat
 from repro.core.strategies.fedbuff import FedBuffSat
+from repro.core.strategies.fedspace import FedSpaceSat
+from repro.core.strategies.ground_assisted import GroundAssistedSat
+from repro.core.strategies.sparse import sparse_variant
 
-__all__ = ["Strategy", "ClientWorkMode", "FedAvgSat", "FedProxSat", "FedBuffSat"]
+__all__ = ["Strategy", "ClientWorkMode", "BufferState", "PendingUpdate",
+           "FedAvgSat", "FedProxSat", "FedBuffSat", "FedSpaceSat",
+           "GroundAssistedSat", "sparse_variant"]

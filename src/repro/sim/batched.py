@@ -58,7 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comms.contact_plan import WindowTable, _EdgeWindows
+from repro.comms.contact_plan import ContactOutlook, WindowTable
 from repro.core.aggregation import weighted_delta_update
 from repro.core.client import vmapped_client_update
 from repro.core.selection import (
@@ -67,7 +67,7 @@ from repro.core.selection import (
     ClientPlan,
     ScheduleSelector,
 )
-from repro.core.strategies.base import ClientWorkMode
+from repro.core.strategies.base import ClientWorkMode, Strategy
 from repro.obs import count, enabled as obs_enabled, span
 from repro.sim.engine import (
     ConstellationSim,
@@ -80,13 +80,20 @@ from repro.sim.metrics import SimResult
 
 def _fast_plannable(sim: ConstellationSim) -> bool:
     """Scenarios the lockstep batched planner covers: the synchronous
-    no-relay AccessWindows path (fedavg/fedprox + sched variants). Relay,
-    ContactPlan-backed and async scenarios plan on their scalar twins."""
+    no-relay AccessWindows path (fedavg/fedprox + sched variants) with
+    stock scheduling hooks. Relay, ContactPlan-backed, async, and
+    custom-hook (connectivity-aware) scenarios plan on their scalar
+    twins — the lockstep planner reproduces the one-group round barrier,
+    so a strategy that times rounds differently must run its own loop."""
     sel = sim.alg.selector
+    strat = type(sim.alg.strategy)
     return (sim.alg.synchronous
             and sim.plan is None
             and not sel.use_relay
             and type(sel) in (BaseSelector, ScheduleSelector)
+            and strat.admit is Strategy.admit
+            and strat.should_flush is Strategy.should_flush
+            and strat.next_sync_point is Strategy.next_sync_point
             and sim.constellation.n_sats >= 2)
 
 
@@ -97,11 +104,8 @@ def _ground_table(sim: ConstellationSim) -> WindowTable:
     the flat `hw.tx_time_s`); the table exists for its batched
     `first_live` window search.
     """
-    rate = sim.hw.link_mbps * 1e6
-    edges = [_EdgeWindows(np.asarray(s, float), np.asarray(e, float),
-                          np.full(len(s), rate))
-             for s, e in sim.aw.per_sat]
-    return WindowTable.from_edges(edges)
+    return ContactOutlook.from_access(
+        sim.aw, rate_bps=sim.hw.link_mbps * 1e6).ground
 
 
 @dataclasses.dataclass
@@ -156,7 +160,7 @@ def _plan_sync_batched(states: list[_PlanState], table: WindowTable) -> None:
             minf=min(alg.min_epochs, hw.max_local_epochs),
             E=alg.local_epochs,
             schedule=alg.selector.schedule,
-            c=min(cfg.clients_per_round, st.K),
+            c=alg.strategy.round_size(min(cfg.clients_per_round, st.K)),
             comm_b=2.0 * hw.model_bytes,
         )
 

@@ -15,9 +15,19 @@ Couples four layers:
                                              FEMNIST classifiers, LM
                                              fine-tuning, ...).
 
-Synchronous algorithms (FedAvg/FedProx families) run the round-barrier
-loop of Algorithms 1-2; FedBuff runs the asynchronous buffered event loop
-of Algorithm 3. Both share one round-execution core (`_train_round` +
+One strategy-driven event loop (`_run_events`) executes every algorithm:
+two event feeds — the synchronous selection barrier of Algorithms 1-2
+and the asynchronous upload heap of Algorithm 3 — dispatch every
+admission / flush / sync-point decision through the strategy's
+scheduling hooks (`Strategy.admit` / `should_flush` /
+`next_sync_point`), with a read-only `ContactOutlook` over the
+scenario's contact schedule as the hooks' view of the future. The
+default hooks reproduce the classic barrier and size-D buffer
+semantics bitwise (tests/test_engine_parity.py pins every registry
+algorithm's RoundRecords against the pre-refactor engine); overriding
+them yields connectivity-aware round timing (FedSpace-style early
+flushes, per-visit ground-assisted aggregation) without touching the
+engine. Both feeds share one round-execution core (`_train_round` +
 `_finish_round`) and produce the paper's three metrics per round:
 accuracy, round duration, and per-satellite idle time.
 
@@ -43,12 +53,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comms.contact_plan import ContactPlan, build_contact_plan
+from repro.comms.contact_plan import (
+    ContactOutlook,
+    ContactPlan,
+    build_contact_plan,
+)
 from repro.comms.isl import ISLTopology, compute_isl_windows
 from repro.comms.links import ConstantRate, LinkModel
 from repro.core.aggregation import admission_weights
 from repro.core.client import vmapped_client_update
 from repro.core.spaceify import SpaceifiedAlgorithm
+from repro.core.strategies.base import BufferState, PendingUpdate
 from repro.core.timing import HardwareModel
 from repro.core.workload import Workload, get_workload, validate_execution
 from repro.data.federated import FederatedDataset
@@ -294,9 +309,7 @@ class ConstellationSim:
         if K < 2:
             # A single satellite cannot federate (heatmap top-left = 0).
             return self._result([], [], None)
-        if self.alg.synchronous:
-            return self._run_sync()
-        return self._run_async()
+        return self._run_events()
 
     # ------------------------------------------------------------------ #
     def _steps_for(self, k: int, epochs: int) -> int:
@@ -508,62 +521,144 @@ class ConstellationSim:
         return float(acc)
 
     # ------------------------------------------------------------------ #
-    def _run_sync(self) -> SimResult:
-        cfg, hw, alg = self.cfg, self.hw, self.alg
-        K = self.constellation.n_sats
-        c = min(cfg.clients_per_round, K)
+    # Strategy-driven event loop
+    # ------------------------------------------------------------------ #
+    def _build_outlook(self) -> ContactOutlook:
+        """Read-only contact-schedule view handed to the strategy hooks.
+
+        Built from the compiled ContactPlan when the algorithm plans
+        against one, otherwise straight from the access windows at the
+        hardware link rate. Only constructed when a hook actually reads
+        it (`_LazyOutlook`), so stock strategies pay nothing."""
+        if self.plan is not None:
+            return ContactOutlook.from_plan(self.plan)
+        return ContactOutlook.from_access(
+            self.aw, rate_bps=self.hw.link_mbps * 1e6)
+
+    def _sync_flush_groups(self, plans, outlook) -> list[list[int]]:
+        """Partition one synchronous selection into aggregation groups.
+
+        Scheduled returns are fed through `admit`/`should_flush` in
+        arrival (tx_end) order; each positive flush decision closes a
+        group. Group members are emitted in plan (selection) order, so
+        aggregation weight order matches the classic barrier bitwise.
+        The default hooks accept everything and only flush a full
+        buffer, which reproduces the single all-plans barrier exactly;
+        per-visit strategies (ground-assisted) close a group at every
+        station-visit boundary instead."""
+        strategy = self.alg.strategy
+        order = sorted(range(len(plans)), key=lambda i: plans[i].tx_end)
+        groups: list[list[int]] = []
+        pend_idx: list[int] = []
+        pend_upd: list[PendingUpdate] = []
+        for pos, i in enumerate(order):
+            p = plans[i]
+            nxt = (plans[order[pos + 1]].tx_end
+                   if pos + 1 < len(order) else None)
+            upd = PendingUpdate(k=p.k, staleness=0, epochs=p.epochs,
+                                tx_end=p.tx_end)
+            if not strategy.admit(upd, BufferState(
+                    updates=tuple(pend_upd), target_size=len(plans),
+                    now=p.tx_end, next_arrival_s=nxt)):
+                continue      # rejected sync returns are dropped
+            pend_idx.append(i)
+            pend_upd.append(upd)
+            state = BufferState(updates=tuple(pend_upd),
+                                target_size=len(plans), now=p.tx_end,
+                                next_arrival_s=nxt)
+            if strategy.should_flush(state, outlook):
+                groups.append(sorted(pend_idx))
+                pend_idx, pend_upd = [], []
+        if pend_idx:      # the tail aggregates rather than being dropped
+            groups.append(sorted(pend_idx))
+        return groups
+
+    def _run_events(self) -> SimResult:
+        """The unified round loop: one of two event feeds (synchronous
+        selection barrier / asynchronous upload heap) routes every
+        scheduling decision through the strategy hooks."""
+        cfg, alg = self.cfg, self.alg
         rng = jax.random.PRNGKey(cfg.seed)
         rng, init_rng = jax.random.split(rng)
         global_params = self.init_fn(init_rng) if cfg.train else None
-
-        t = 0.0
+        outlook = _LazyOutlook(self._build_outlook)
         rounds: list[RoundRecord] = []
         curve: list[tuple[int, float, float]] = []
-        for r in range(cfg.max_rounds):
+        if alg.synchronous:
+            global_params = self._sync_feed(rng, global_params, outlook,
+                                            rounds, curve)
+        else:
+            global_params = self._async_feed(rng, global_params, outlook,
+                                             rounds, curve)
+        self._final_eval(rounds, curve, global_params)
+        return self._result(rounds, curve, global_params)
+
+    def _sync_feed(self, rng, global_params, outlook, rounds, curve):
+        """Synchronous feed (Algorithms 1-2): select, then aggregate each
+        flush group the strategy closes over the selection's returns."""
+        cfg, hw, alg = self.cfg, self.hw, self.alg
+        strategy = alg.strategy
+        K = self.constellation.n_sats
+        c = min(cfg.clients_per_round, K)
+
+        t = 0.0
+        stop = False
+        while len(rounds) < cfg.max_rounds and not stop:
+            t = max(t, strategy.next_sync_point(outlook, t))
             if t >= cfg.horizon_s:
                 break
-            with span("sim.round", idx=r) as round_span:
+            with span("sim.round", idx=len(rounds)) as round_span:
                 with span("sim.select", stage="train"):
                     plans = alg.selector.select(
-                        self.aw, t, range(K), c, alg.strategy, hw,
+                        self.aw, t, range(K), c, strategy, hw,
                         alg.local_epochs, alg.min_epochs, plan=self.plan)
                 if not plans:
                     round_span.set(aborted="no_plans")
                     break
-                t_end = max(p.tx_end for p in plans)
-                if t_end > cfg.horizon_s:
-                    round_span.set(aborted="horizon")
+                groups = self._sync_flush_groups(plans, outlook)
+                if not groups:
+                    # Strategy admitted nothing: time cannot advance, so
+                    # bail out instead of re-selecting the same plans.
+                    round_span.set(aborted="no_admits")
                     break
+                t_group = t
+                for g in groups:
+                    if len(rounds) >= cfg.max_rounds:
+                        break
+                    sub = [plans[i] for i in g]
+                    t_end = max(p.tx_end for p in sub)
+                    if t_end > cfg.horizon_s:
+                        round_span.set(aborted="horizon")
+                        stop = True
+                        break
+                    if cfg.train:
+                        rng, sub_rng = jax.random.split(rng)
+                        ks = [p.k for p in sub]
+                        global_params = self._train_round(
+                            global_params, ks, [p.epochs for p in sub],
+                            sub_rng,
+                            weights=jnp.asarray(self.data.n[ks],
+                                                jnp.float32),
+                            staleness=jnp.zeros((len(sub),), jnp.int32))
+                    self._finish_round(
+                        rounds, curve, global_params,
+                        do_eval=(len(rounds) % cfg.eval_every == 0
+                                 or len(rounds) == cfg.max_rounds - 1),
+                        **sync_round_metrics(sub, t_group, t_end),
+                    )
+                    t_group = t_end
+                    t = max(t, t_end)
+        return global_params
 
-                if cfg.train:
-                    rng, sub = jax.random.split(rng)
-                    ks = [p.k for p in plans]
-                    global_params = self._train_round(
-                        global_params, ks, [p.epochs for p in plans], sub,
-                        weights=jnp.asarray(self.data.n[ks], jnp.float32),
-                        staleness=jnp.zeros((len(plans),), jnp.int32))
-
-                self._finish_round(
-                    rounds, curve, global_params,
-                    do_eval=(r % cfg.eval_every == 0
-                             or r == cfg.max_rounds - 1),
-                    **sync_round_metrics(plans, t, t_end),
-                )
-                t = t_end
-        self._final_eval(rounds, curve, global_params)
-        return self._result(rounds, curve, global_params)
-
-    # ------------------------------------------------------------------ #
-    def _run_async(self) -> SimResult:
-        """FedBuff event loop: every satellite cycles contact->train->upload;
-        the server aggregates whenever D updates have buffered."""
+    def _async_feed(self, rng, global_params, outlook, rounds, curve):
+        """Asynchronous feed (Algorithm 3): every satellite cycles
+        contact->train->upload; the strategy decides which uploads buffer
+        and when the buffer flushes (default: at D updates, FedBuff)."""
         cfg, hw, alg = self.cfg, self.hw, self.alg
+        strategy = alg.strategy
         K = self.constellation.n_sats
-        c = min(cfg.clients_per_round, K)
+        c = strategy.round_size(min(cfg.clients_per_round, K))
         D = max(1, int(round(alg.buffer_frac * c)))
-        rng = jax.random.PRNGKey(cfg.seed)
-        rng, init_rng = jax.random.split(rng)
-        global_params = self.init_fn(init_rng) if cfg.train else None
         history = {0: global_params}
         version = 0
         last_agg_t = 0.0
@@ -592,15 +687,25 @@ class ConstellationSim:
             schedule_cycle(k, 0.0, 0)
 
         buffer: list = []
-        rounds: list[RoundRecord] = []
-        curve: list[tuple[int, float, float]] = []
+        pending: list[PendingUpdate] = []   # strategy-facing twin of buffer
         while heap and len(rounds) < cfg.max_rounds:
             tx_end, k, ver, epochs, dl_t, train_span, comm_s = heapq.heappop(heap)
             if tx_end > cfg.horizon_s:
                 break
-            buffer.append((k, ver, epochs, dl_t, train_span, comm_s, tx_end))
+            nxt_arrival = heap[0][0] if heap else None
+            upd = PendingUpdate(k=k, staleness=version - ver, epochs=epochs,
+                                tx_end=tx_end, version=ver)
+            if strategy.admit(upd, BufferState(
+                    updates=tuple(pending), target_size=D, now=tx_end,
+                    version=version, next_arrival_s=nxt_arrival)):
+                buffer.append((k, ver, epochs, dl_t, train_span, comm_s,
+                               tx_end))
+                pending.append(upd)
 
-            if len(buffer) < D:
+            state = BufferState(updates=tuple(pending), target_size=D,
+                                now=tx_end, version=version,
+                                next_arrival_s=nxt_arrival)
+            if not buffer or not strategy.should_flush(state, outlook):
                 # Satellite immediately re-downloads in the same pass and
                 # keeps training — FedBuff's no-idle property (Figure 9c).
                 schedule_cycle(k, tx_end, version)
@@ -653,5 +758,23 @@ class ConstellationSim:
                 )
                 last_agg_t = t_agg
                 buffer = []
-        self._final_eval(rounds, curve, global_params)
-        return self._result(rounds, curve, global_params)
+                pending = []
+        return global_params
+
+
+class _LazyOutlook:
+    """Deferred `ContactOutlook` construction for the strategy hooks.
+
+    The stock strategies' hooks never read the outlook, so building the
+    window tables for every run would be pure overhead; this proxy
+    builds the real view on first attribute access and forwards
+    everything to it afterwards."""
+
+    def __init__(self, build):
+        self._build = build
+        self._view = None
+
+    def __getattr__(self, name):
+        if self._view is None:
+            self._view = self._build()
+        return getattr(self._view, name)

@@ -183,9 +183,11 @@ def test_algorithm_suite_is_papers_table1():
         "fedprox", "fedprox_sched", "fedprox_sched_v2", "fedprox_intracc",
         "fedbuff",
     }
-    # The registered suite = Table 1 + the ISL-priced relay extensions.
+    # The registered suite = Table 1 + the ISL-priced relay extensions
+    # + the connectivity-aware strategies from the related work.
     assert set(ALGORITHMS) == set(TABLE1_ALGORITHMS) | {
         "fedavg_intracc_isl", "fedprox_intracc_isl",
+        "fedspace", "ground_assisted", "fedprox_sparse",
     }
     assert not ALGORITHMS["fedbuff"].synchronous
     assert ALGORITHMS["fedprox_sched_v2"].min_epochs == 5

@@ -1,0 +1,132 @@
+"""Golden-record parity pin for the strategy-driven event loop.
+
+The engine refactor that collapsed `_run_sync` and the FedBuff buffer
+loop into one strategy-driven event loop (`ConstellationSim._run_events`)
+must reproduce every pre-refactor algorithm's RoundRecords *bitwise* —
+timing, participants, epochs, idle/compute/comm splits, staleness and
+comms bytes. The fixtures in `tests/data/engine_parity.json` were
+captured from the pre-refactor engine (two loops, PR 8 state) over every
+registry algorithm on two small deterministic scenarios; this test
+replays the same scenarios through the current engine and compares
+field-for-field with exact float equality (JSON round-trips doubles via
+repr, so == is bitwise).
+
+Regenerate (only when *intentionally* changing round semantics):
+    PYTHONPATH=src python tests/test_engine_parity.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest
+
+from repro.comms.isl import compute_isl_windows
+from repro.comms.contact_plan import build_contact_plan
+from repro.core import ALGORITHMS, FedBuffSat, spaceify
+from repro.orbits import WalkerStar, compute_access_windows, \
+    station_subnetwork
+from repro.sim import ConstellationSim, SimConfig
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "engine_parity.json")
+
+# Two scenarios: a 6-satellite, 2-station cell with partial selection
+# (c < K) and a 6-satellite single-station cell where every satellite is
+# selected (c > K). Short horizons keep the pin fast while leaving room
+# for multiple rounds per algorithm.
+SCENARIOS = {
+    "c2s3_g2": dict(clusters=2, sats=3, g=2, days=6.0, rounds=8, c=4),
+    "c3s2_g1": dict(clusters=3, sats=2, g=1, days=4.0, rounds=6, c=10),
+}
+
+
+def _algorithms():
+    """Every registry algorithm of the pre-refactor suite, plus a
+    partial-buffer FedBuff (D < c) so the async flush threshold is
+    exercised away from the full-buffer default."""
+    algs = [ALGORITHMS[n] for n in (
+        "fedavg", "fedavg_sched", "fedavg_intracc",
+        "fedprox", "fedprox_sched", "fedprox_sched_v2", "fedprox_intracc",
+        "fedbuff", "fedavg_intracc_isl", "fedprox_intracc_isl")]
+    algs.append(spaceify(FedBuffSat(), buffer_frac=0.34,
+                         name="fedbuff_d034"))
+    return algs
+
+
+def _records(scn: dict, alg) -> list[dict]:
+    cst = WalkerStar(scn["clusters"], scn["sats"])
+    stations = station_subnetwork(scn["g"])
+    horizon_s = scn["days"] * 86400.0
+    aw = compute_access_windows(cst, stations, horizon_s=horizon_s)
+    plan = None
+    if alg.isl:
+        iw = compute_isl_windows(cst, horizon_s=horizon_s)
+        plan = build_contact_plan(aw, iw, constellation=cst,
+                                  stations=stations)
+    cfg = SimConfig(max_rounds=scn["rounds"], horizon_s=horizon_s,
+                    clients_per_round=scn["c"], eval_every=3, train=False)
+    res = ConstellationSim(cst, stations, alg, cfg=cfg, access=aw,
+                           contact_plan=plan).run()
+    return [dict(
+        idx=r.idx, t_start=r.t_start, t_end=r.t_end,
+        participants=list(r.participants), epochs=list(r.epochs),
+        idle_s=list(r.idle_s), compute_s=list(r.compute_s),
+        comm_s=list(r.comm_s), relays=list(r.relays),
+        staleness=list(r.staleness), relay_hops=list(r.relay_hops),
+        comms_bytes=list(r.comms_bytes)) for r in res.rounds]
+
+
+def _capture() -> dict:
+    out = {}
+    for sname, scn in SCENARIOS.items():
+        for alg in _algorithms():
+            out[f"{sname}/{alg.name}"] = _records(scn, alg)
+    return out
+
+
+def _golden() -> dict:
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("sname", list(SCENARIOS))
+def test_round_records_match_pre_refactor_engine(sname):
+    golden = _golden()
+    scn = SCENARIOS[sname]
+    for alg in _algorithms():
+        key = f"{sname}/{alg.name}"
+        assert key in golden, f"missing golden for {key}"
+        got = _records(scn, alg)
+        want = golden[key]
+        assert len(got) == len(want), \
+            f"{key}: {len(got)} rounds vs golden {len(want)}"
+        for g, w in zip(got, want):
+            for field in w:
+                assert g[field] == w[field], \
+                    f"{key} round {g['idx']}: {field} {g[field]!r} " \
+                    f"!= golden {w[field]!r}"
+
+
+def test_golden_covers_all_registry_algorithms():
+    """Every committed fixture ran at least one round (an empty pin would
+    vacuously pass the bitwise comparison)."""
+    golden = _golden()
+    names = {k.split("/", 1)[1] for k in golden}
+    for alg in _algorithms():
+        assert alg.name in names
+    assert sum(len(v) for v in golden.values()) > 0
+    for key, recs in golden.items():
+        assert recs, f"golden {key} captured zero rounds"
+
+
+if __name__ == "__main__":
+    os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+    cap = _capture()
+    with open(GOLDEN, "w") as f:
+        json.dump(cap, f, indent=1)
+    n = sum(len(v) for v in cap.values())
+    print(f"wrote {len(cap)} fixtures ({n} rounds) to {GOLDEN}")
