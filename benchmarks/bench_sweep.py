@@ -24,6 +24,11 @@ cost model — the LM suite (`lm_tiny`, `lm_moe_tiny`, `lm_rwkv6_tiny`,
 `lm_hybrid_tiny`) is where the round-duration vs model-bytes crossover
 lives: the MoE workload's FLOPs are priced on activated parameters only
 while all experts ride the wire.
+`--codec` compresses every client's uplink with a `repro.comms.codec`
+transfer codec (quant_int8 / quant_fp8 / topk_sparse): wire bytes and
+upload durations shrink per the codec's pricing, and with `--train` the
+lossy delta runs on the real training path, so the accuracy column is a
+measurement, not a model; rows are tagged `sweep~quant_int8/...`.
 """
 from __future__ import annotations
 
@@ -55,7 +60,8 @@ def run(rounds: int = 20, quick: bool = False, isl: bool = False,
         horizon_s: float = HORIZON_S, workload: str | None = None,
         train: bool = False, execution: str | None = None,
         link_model: str | None = None, smoke: bool = False,
-        batched: bool = False, algorithms: tuple[str, ...] | None = None):
+        batched: bool = False, algorithms: tuple[str, ...] | None = None,
+        codec: str | None = None):
     if batched and execution:
         raise ValueError("--batched is its own vmapped executor; "
                          "--execution selects the loop path's")
@@ -95,6 +101,12 @@ def run(rounds: int = 20, quick: bool = False, isl: bool = False,
         # Budget pricing changes every row's comms arithmetic: tag the
         # names so the regression gate compares like against like.
         wtag = f"+{link_model}{wtag}"
+    if codec and codec != "identity":
+        # A lossy uplink codec changes the wire/duration arithmetic (and,
+        # with --train, the measured accuracy): tag the rows.
+        wtag = f"~{codec}{wtag}"
+    else:
+        codec = None        # identity IS the default path — same rows
     if execution:
         # The execution axis only changes *how* gradients run (host vmap
         # vs mesh collective); tagging timing-only rows with it would
@@ -111,12 +123,12 @@ def run(rounds: int = 20, quick: bool = False, isl: bool = False,
         # loop path above (durations/idle bitwise for timing-only runs).
         results = dict(zip(cells, run_scenarios_batched(
             cells, rounds=rounds, train=train, horizon_s=horizon_s,
-            workload=workload, link_model=link_model)))
+            workload=workload, link_model=link_model, codec=codec)))
     else:
         results = {c: run_scenario(*c, rounds=rounds, horizon_s=horizon_s,
                                    workload=workload, train=train,
                                    execution=execution,
-                                   link_model=link_model)
+                                   link_model=link_model, codec=codec)
                    for c in cells}
     rows = []
     n_run = n_skip = 0
@@ -132,6 +144,15 @@ def run(rounds: int = 20, quick: bool = False, isl: bool = False,
             derived = (f"idle_h={derived};"
                        f"hops={res.total_relay_hops};"
                        f"mb={round(res.total_comms_bytes / 1e6, 2)}")
+        elif codec:
+            # Codec rows carry the wire story (and the MEASURED accuracy
+            # when training) alongside the duration value.
+            derived = (f"idle_h={derived};"
+                       f"mb={round(res.total_comms_bytes / 1e6, 2)};"
+                       f"saved_mb="
+                       f"{round(res.total_wire_bytes_saved / 1e6, 2)}")
+            if train:
+                derived += f";acc={round(res.final_accuracy, 4)}"
         rows.append((
             f"sweep{wtag}/{alg}/c{cl}s{sp}/g{g}",
             round(res.mean_round_duration_s / 3600, 3),
@@ -176,6 +197,12 @@ def main(argv=None):
                     help="comms pricing: constant 580 Mbps telemetry "
                          "(default) or the slant-range LinkBudget, "
                          "re-rated from the cached plan geometry")
+    from repro.comms.codec import codec_names
+    ap.add_argument("--codec", default=None, choices=codec_names(),
+                    help="uplink transfer codec (repro.comms.codec): "
+                         "prices client returns on the wire and, with "
+                         "--train, applies the lossy delta on the real "
+                         "training path (measured accuracy cost)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="enable repro.obs tracing and write a Chrome/"
                          "Perfetto trace.json of the run")
@@ -211,7 +238,8 @@ def main(argv=None):
              horizon_s=horizon_s, workload=args.workload,
              train=args.train, execution=args.execution,
              link_model=args.link_model, smoke=args.smoke,
-             batched=args.batched, algorithms=algorithms))
+             batched=args.batched, algorithms=algorithms,
+             codec=args.codec))
     if args.trace:
         summary = obs.metrics_summary()
         obs.write_chrome_trace(args.trace)

@@ -43,8 +43,11 @@ DURATION_SUITES = ("sweep_ci", "sweep768", "round_duration")
 # training durations of the batched scenario sweep): any drift is a
 # behaviour change in the comms or sim stack, not noise — lower
 # reachability is as much a regression as a later arrival, and a parity
-# count below the grid size means the batched executor diverged.
-DRIFT_SUITES = ("scale", "batched")
+# count below the grid size means the batched executor diverged. The
+# `codec` suite pins the compressed-uplink story the same way: wire
+# bytes, wire savings, durations, measured accuracy, and loop-vs-batched
+# parity under each transfer codec.
+DRIFT_SUITES = ("scale", "batched", "codec")
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "..",
                                 "BENCH_sweep.json")
 # CI trend-grid knobs — must stay identical between the committed
@@ -299,6 +302,79 @@ def generate_batched_suite() -> dict:
             "rows": [list(r) for r in rows]}
 
 
+def generate_codec_suite() -> dict:
+    """Compressed-uplink suite (`repro.comms.codec`), DRIFT-gated.
+
+    One small trained scenario (fedavg, 2x2 constellation, 1 station,
+    3 rounds) per codec, on the loop path AND as a `BatchedSweep`:
+
+      * per-codec round duration, total wire MB, wire MB saved, and the
+        MEASURED final accuracy (the lossy delta ran on the training
+        path) plus its delta vs the identity run;
+      * `identity_is_seed` pins the identity codec's rows to the exact
+        numbers an un-codec'd run produces (bitwise back-compat);
+      * per-codec `batched_parity` pins the vmapped executor: timing
+        bitwise, accuracy within the 1e-5 envelope.
+
+    Accuracies are rounded to 2dp so legitimate float jitter (BLAS
+    reductions across versions) stays inside the drift tolerance while a
+    real convergence change still fails the gate.
+    """
+    from benchmarks import common
+
+    from repro import obs
+    from repro.comms.codec import codec_names
+
+    fresh = not obs.enabled()
+    if fresh:
+        obs.enable()
+    t0 = time.perf_counter()
+    cell = ("fedavg", 2, 2, 1)
+    knobs = dict(rounds=3, train=True, eval_every=2,
+                 horizon_s=TREND_HORIZON_DAYS * 86400.0)
+    rows = []
+    acc0 = None
+    plain = common.run_scenario(*cell, **knobs)   # no codec kwarg at all
+    for codec in ["identity"] + [c for c in codec_names()
+                                 if c != "identity"]:
+        lr = common.run_scenario(*cell, codec=codec, **knobs)
+        br = common.run_scenarios_batched([cell], codec=codec, **knobs)[0]
+        acc = round(lr.final_accuracy, 2)
+        if codec == "identity":
+            acc0 = acc
+            same = (lr.summary() == plain.summary())
+            rows.append(("codec/identity_is_seed", int(same),
+                         "summary==no-codec-run"))
+        rows.append((f"codec/{codec}/duration",
+                     round(lr.mean_round_duration_s / 3600, 3),
+                     f"rounds={len(lr.rounds)}"))
+        rows.append((f"codec/{codec}/comms_mb",
+                     round(lr.total_comms_bytes / 1e6, 2), ""))
+        rows.append((f"codec/{codec}/saved_mb",
+                     round(lr.total_wire_bytes_saved / 1e6, 2), ""))
+        rows.append((f"codec/{codec}/final_acc", acc,
+                     f"acc_delta={round(acc - acc0, 2)}"))
+        cl = {i: a for i, _, a in lr.accuracy_curve}
+        cb = {i: a for i, _, a in br.accuracy_curve}
+        err = (max((abs(cl[i] - cb[i]) for i in cl), default=0.0)
+               if set(cl) == set(cb) else float("inf"))
+        timing_ok = all(
+            abs(a.duration_s - b.duration_s) == 0.0
+            and a.comms_bytes == b.comms_bytes
+            and a.wire_bytes_saved == b.wire_bytes_saved
+            for a, b in zip(lr.rounds, br.rounds))
+        rows.append((f"codec/{codec}/batched_parity",
+                     int(timing_ok and err <= 1e-5),
+                     f"maxerr={err:.2e}"))
+    wall_s = time.perf_counter() - t0
+    if fresh:
+        obs.disable()
+    return {"rounds": knobs["rounds"],
+            "horizon_days": TREND_HORIZON_DAYS,
+            "wall_s": round(wall_s, 2),
+            "rows": [list(r) for r in rows]}
+
+
 def wall_trend(baseline: dict, current: dict) -> list[str]:
     """Informational wall-clock trend lines (never gate CI: wall seconds
     are machine-dependent, unlike the simulated duration rows)."""
@@ -334,6 +410,7 @@ def main(argv=None) -> int:
     current = generate_trend_suite()
     current["suites"]["scale"] = generate_scale_suite()
     current["suites"]["batched"] = generate_batched_suite()
+    current["suites"]["codec"] = generate_codec_suite()
     path = args.baseline
 
     if args.write_baseline:
@@ -346,6 +423,7 @@ def main(argv=None) -> int:
         merged["suites"]["sweep_ci"] = current["suites"]["sweep_ci"]
         merged["suites"]["scale"] = current["suites"]["scale"]
         merged["suites"]["batched"] = current["suites"]["batched"]
+        merged["suites"]["codec"] = current["suites"]["codec"]
         with open(path, "w") as f:
             json.dump(merged, f, indent=1)
         print(f"# wrote trend baseline to {os.path.normpath(path)}")

@@ -193,7 +193,7 @@ def run_scenario(alg: str, clusters: int, sats: int, n_stations: int,
                  *, rounds: int = 30, train: bool = False, seed: int = 0,
                  eval_every: int = 10, horizon_s: float = HORIZON_S,
                  workload: str | None = None, execution: str | None = None,
-                 link_model: str | None = None):
+                 link_model: str | None = None, codec: str | None = None):
     """Run one sweep cell. `workload=None` is the seed's FEMNIST-MLP path
     (bitwise); naming a registry workload swaps the model + loss + data
     AND the hardware cost model (comms bytes / epoch times) it implies.
@@ -204,7 +204,8 @@ def run_scenario(alg: str, clusters: int, sats: int, n_stations: int,
     with the default `LinkBudget` (overriding any workload radio pin) —
     and forces a ContactPlan even for non-ISL algorithms, so ground
     uploads are range-priced too. A frozen `LinkModel` instance is used
-    as-is."""
+    as-is. `codec` names a `repro.comms.codec` uplink codec overriding
+    the algorithm's knob (None keeps it)."""
     with span("bench.scenario",
               scenario=f"{alg}/c{clusters}s{sats}/g{n_stations}",
               workload=workload, link_model=str(link_model),
@@ -212,17 +213,23 @@ def run_scenario(alg: str, clusters: int, sats: int, n_stations: int,
         return _run_scenario(
             alg, clusters, sats, n_stations, rounds=rounds, train=train,
             seed=seed, eval_every=eval_every, horizon_s=horizon_s,
-            workload=workload, execution=execution, link_model=link_model)
+            workload=workload, execution=execution, link_model=link_model,
+            codec=codec)
 
 
 def make_scenario_sim(alg, clusters, sats, n_stations, *, rounds, train,
                       seed, eval_every, horizon_s, workload, execution,
-                      link_model) -> ConstellationSim:
+                      link_model, codec=None) -> ConstellationSim:
     """Build (but don't run) the `ConstellationSim` for one sweep cell —
     the loop path calls `.run()` on it; the batched path stacks many."""
+    import dataclasses as _dc
     c = WalkerStar(clusters, sats)
     aw = access(clusters, sats, n_stations, horizon_s)
     algorithm = get_algorithm(alg)
+    if codec is not None and codec != algorithm.codec:
+        # Swap the uplink codec in (validated by __post_init__); the name
+        # keeps the registry entry's so sweep rows stay join-able.
+        algorithm = _dc.replace(algorithm, codec=codec)
     if isinstance(link_model, str):
         if link_model not in ("constant", "budget"):
             raise ValueError(f"unknown link_model {link_model!r}; "
@@ -256,18 +263,21 @@ def make_scenario_sim(alg, clusters, sats, n_stations, *, rounds, train,
 
 
 def _run_scenario(alg, clusters, sats, n_stations, *, rounds, train, seed,
-                  eval_every, horizon_s, workload, execution, link_model):
+                  eval_every, horizon_s, workload, execution, link_model,
+                  codec=None):
     return make_scenario_sim(
         alg, clusters, sats, n_stations, rounds=rounds, train=train,
         seed=seed, eval_every=eval_every, horizon_s=horizon_s,
-        workload=workload, execution=execution, link_model=link_model).run()
+        workload=workload, execution=execution, link_model=link_model,
+        codec=codec).run()
 
 
 def run_scenarios_batched(cells, *, rounds: int = 30, train: bool = False,
                           seed: int = 0, eval_every: int = 10,
                           horizon_s: float = HORIZON_S,
                           workload: str | None = None,
-                          link_model: str | None = None):
+                          link_model: str | None = None,
+                          codec: str | None = None):
     """Run a list of `(alg, clusters, sats, n_stations)` sweep cells as ONE
     `BatchedSweep` instead of per-cell `ConstellationSim.run()` calls.
     Returns SimResults in cell order — records bitwise the loop path's
@@ -279,7 +289,8 @@ def run_scenarios_batched(cells, *, rounds: int = 30, train: bool = False,
         sims.append(make_scenario_sim(
             alg, clusters, sats, n_stations, rounds=rounds, train=train,
             seed=seed, eval_every=eval_every, horizon_s=horizon_s,
-            workload=workload, execution=None, link_model=link_model))
+            workload=workload, execution=None, link_model=link_model,
+            codec=codec))
     with span("bench.batched_grid", scenarios=len(sims), train=train,
               workload=workload, link_model=str(link_model)):
         return BatchedSweep(sims, names).run()

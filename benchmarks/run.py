@@ -41,7 +41,8 @@ from benchmarks.common import emit
 
 from repro import obs  # noqa: E402  (benchmarks.common puts src/ on path)
 
-# Every suite takes (full, execution, link_model, workload, algorithms);
+# Every suite takes (full, execution, link_model, workload, algorithms,
+# codec);
 # suites that never run gradients ignore the execution axis (it only
 # changes how gradients run), only the Table-1 sweep carries the
 # link-model axis (it owns the comms-pricing claims) and the algorithms
@@ -52,20 +53,21 @@ from repro import obs  # noqa: E402  (benchmarks.common puts src/ on path)
 # so requesting an execution mode switches it to real training
 # (otherwise the rows would be mislabelled host numbers).
 SUITES = {
-    "kernels": lambda full, ex, lm, wl, al: bench_kernels.run(),
-    "round_duration": lambda full, ex, lm, wl, al: bench_round_duration.run(
-        quick=not full),
-    "idle": lambda full, ex, lm, wl, al: bench_idle.run(quick=not full),
-    "speedup": lambda full, ex, lm, wl, al: bench_speedup.run(
+    "kernels": lambda full, ex, lm, wl, al, cd: bench_kernels.run(),
+    "round_duration": lambda full, ex, lm, wl, al, cd:
+        bench_round_duration.run(quick=not full),
+    "idle": lambda full, ex, lm, wl, al, cd: bench_idle.run(quick=not full),
+    "speedup": lambda full, ex, lm, wl, al, cd: bench_speedup.run(
         train=True, rounds=150 if full else 100, execution=ex),
-    "accuracy": lambda full, ex, lm, wl, al: bench_accuracy.run(
+    "accuracy": lambda full, ex, lm, wl, al, cd: bench_accuracy.run(
         quick=not full, rounds=150 if full else 100, execution=ex,
         workload=wl),
-    "sweep768": lambda full, ex, lm, wl, al: bench_sweep.run(
+    "sweep768": lambda full, ex, lm, wl, al, cd: bench_sweep.run(
         quick=not full, train=ex is not None, execution=ex,
-        link_model=lm, workload=wl, algorithms=al),
-    "scale": lambda full, ex, lm, wl, al: bench_scale.run(quick=not full),
-    "roofline": lambda full, ex, lm, wl, al: bench_roofline.run(),
+        link_model=lm, workload=wl, algorithms=al, codec=cd),
+    "scale": lambda full, ex, lm, wl, al, cd: bench_scale.run(
+        quick=not full),
+    "roofline": lambda full, ex, lm, wl, al, cd: bench_roofline.run(),
 }
 
 DEFAULT_JSON = os.path.join(os.path.dirname(__file__), "..",
@@ -110,6 +112,12 @@ def main(argv=None) -> None:
                     help="comma-separated registry algorithm names for "
                          "the Table-1 sweep (replaces its built-in "
                          "suite; unknown names error up front)")
+    from repro.comms.codec import codec_names
+    ap.add_argument("--codec", default=None, choices=codec_names(),
+                    help="uplink transfer codec for the Table-1 sweep "
+                         "(compressed client returns; with --execution "
+                         "the accuracy cost is measured on the real "
+                         "training path)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="write the full Chrome/Perfetto trace of the run "
                          "(per-suite wall breakdowns land in the artifact "
@@ -135,6 +143,7 @@ def main(argv=None) -> None:
                       "execution": args.execution,
                       "link_model": args.link_model,
                       "workload": args.workload,
+                      "codec": args.codec,
                       "suites": {}}
     names = [args.only] if args.only else list(SUITES)
     t_total = time.perf_counter()
@@ -144,7 +153,7 @@ def main(argv=None) -> None:
         spans0 = _span_totals()
         try:
             rows = SUITES[name](args.full, args.execution, args.link_model,
-                                args.workload, algorithms)
+                                args.workload, algorithms, args.codec)
             emit(rows)
             wall = time.perf_counter() - t0
             print(f"# {name}: {len(rows)} rows in {wall:.1f}s")

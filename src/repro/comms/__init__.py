@@ -11,7 +11,10 @@ communications layer, in four pieces:
   * `contact_plan` — ground passes + ISL windows compiled into one
                      rate-annotated, queryable `ContactPlan`;
   * `routing`      — store-and-forward earliest-arrival (contact-graph
-                     style) routing with bounded hops.
+                     style) routing with bounded hops;
+  * `codec`        — uplink transfer codecs (identity / quant_int8 /
+                     quant_fp8 / topk_sparse): wire pricing AND the
+                     lossy delta transform on the real training path.
 
 `repro.core.selection` plans relayed uploads against a `ContactPlan`, and
 `repro.core.spaceify(..., isl=True)` exposes the ISL-enabled algorithm
@@ -30,10 +33,32 @@ from repro.comms.isl import (
     compute_isl_windows,
     isl_visibility_grid,
 )
+from repro.comms.codec import (
+    CODECS,
+    IdentityCodec,
+    QuantFP8Codec,
+    QuantInt8Codec,
+    TopKSparseCodec,
+    TransferCodec,
+    codec_names,
+    get_codec,
+    register_codec,
+    round_trip_bytes,
+)
 from repro.comms.links import ConstantRate, LinkBudget, LinkModel
 from repro.comms.routing import Route, earliest_arrival
 
 __all__ = [
+    "CODECS",
+    "TransferCodec",
+    "IdentityCodec",
+    "QuantInt8Codec",
+    "QuantFP8Codec",
+    "TopKSparseCodec",
+    "codec_names",
+    "get_codec",
+    "register_codec",
+    "round_trip_bytes",
     "ConstantRate",
     "LinkBudget",
     "LinkModel",

@@ -1,0 +1,289 @@
+"""Transfer codecs — compressed uplinks as a first-class wire-pricing layer.
+
+The paper's core trade-off is wire bytes vs round duration vs final
+accuracy; communication-efficient uplinks are the central lever in
+satellite FL (Matthiesen et al., arXiv 2206.00307) and sparsified
+participation is how edge-LEO systems scale (Elmahallawy & Luo,
+arXiv 2401.15541). A `TransferCodec` owns both sides of that lever:
+
+  * **wire pricing** — `wire_bytes(model_bytes, bytes_per_param)` is the
+    bytes an encoded *uplink* (client delta return) puts on the wire;
+    `encode_bytes(tree)` prices a concrete parameter/delta pytree. The
+    global-model *download* always ships full precision (the server
+    broadcasts one canonical model), so `round_trip_bytes(codec, hw)` —
+    the ONE shared up+down expression used by selection, the engine's
+    async feed, and the batched lockstep planner — is
+    ``model_bytes + wire_bytes``.
+  * **the training-path effect** — `apply(delta, rng)` runs the lossy
+    encode/decode on the client's parameter delta inside the real
+    training path (loop engine, mesh collective, and vmapped batched
+    sweep), so a sweep's accuracy cost is *measured*, not modeled.
+
+Codecs are frozen dataclasses (hashable — they ride inside the frozen
+`HardwareModel`) and pure-JAX in `apply`, so they vmap over clients and
+scenario batches unchanged. Stochastic rounding keys derive from the
+client's own training key via `fold_in(rng, CODEC_RNG_TAG)`: every
+execution path (host vmap, mesh shard_map, batched scenario slab)
+already carries per-client keys, so codec randomness is reproducible
+and path-consistent by construction.
+
+`CODECS` is an open registry mirroring the algorithm/workload ones:
+`get_codec()` resolves names with the vocabulary on error,
+`register_codec()` adds entries.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.orbits import constants as C
+
+# Domain tag folded into each client's training key to derive its codec
+# (stochastic-rounding) key — keeps codec randomness independent of the
+# SGD batch draws while staying bitwise-reproducible across the host,
+# mesh, and batched execution paths (all of which carry the same
+# per-client keys).
+CODEC_RNG_TAG = 0x5EC0DE
+
+
+def _tree_params(tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+def _stochastic_round(x, key):
+    """Unbiased round-to-integer: floor + Bernoulli(frac) carry."""
+    lo = jnp.floor(x)
+    carry = (jax.random.uniform(key, x.shape, x.dtype) < (x - lo))
+    return lo + carry.astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferCodec:
+    """Identity codec — the bitwise back-compat default.
+
+    Subclasses override `wire_ratio` (uplink bytes per full-precision
+    byte) and `_apply_leaf` (the lossy per-leaf transform); `apply`
+    handles tree plumbing and per-leaf key splitting for all of them.
+    """
+
+    name = "identity"
+
+    @property
+    def lossy(self) -> bool:
+        """Whether `apply` changes the delta (identity: no)."""
+        return False
+
+    # --- wire pricing ---------------------------------------------------
+    def wire_ratio(self, bytes_per_param: int = C.BYTES_PER_PARAM) -> float:
+        """Encoded uplink bytes per full-precision wire byte."""
+        return 1.0
+
+    def wire_bytes(self, model_bytes: float,
+                   bytes_per_param: int = C.BYTES_PER_PARAM) -> float:
+        """Bytes one encoded uplink (client delta return) puts on the
+        wire, given the full-precision transfer size. Relay routing
+        multiplies this per store-and-forward leg."""
+        return float(model_bytes) * self.wire_ratio(bytes_per_param)
+
+    def encode_bytes(self, tree,
+                     bytes_per_param: int = C.BYTES_PER_PARAM) -> float:
+        """Wire bytes for a concrete parameter/delta pytree."""
+        return self.wire_bytes(_tree_params(tree) * bytes_per_param,
+                               bytes_per_param)
+
+    # --- the training-path effect ---------------------------------------
+    def _apply_leaf(self, x, key):
+        return x
+
+    def apply(self, delta, rng):
+        """Lossy encode/decode of one client's parameter delta.
+
+        Pure JAX (vmaps over clients/scenarios); `rng` seeds stochastic
+        rounding. The identity codec returns `delta` untouched — same
+        pytree, same arrays."""
+        if not self.lossy:
+            return delta
+        leaves, treedef = jax.tree.flatten(delta)
+        keys = jax.random.split(jax.random.fold_in(rng, CODEC_RNG_TAG),
+                                len(leaves))
+        return jax.tree.unflatten(
+            treedef, [self._apply_leaf(l, k) for l, k in zip(leaves, keys)])
+
+
+IdentityCodec = TransferCodec
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantInt8Codec(TransferCodec):
+    """Per-leaf symmetric int8 quantization with stochastic rounding.
+
+    Each leaf ships one f32 scale (`max|x| / 127`, negligible overhead)
+    plus one signed byte per parameter; `apply` is the quantize ->
+    dequantize round trip, so the absolute error per element is bounded
+    by one quantization step (`max|x| / 127` of its leaf)."""
+
+    name = "quant_int8"
+    levels: int = 127            # symmetric: values land in [-127, 127]
+
+    @property
+    def lossy(self) -> bool:
+        return True
+
+    def wire_ratio(self, bytes_per_param: int = C.BYTES_PER_PARAM) -> float:
+        return 1.0 / bytes_per_param
+
+    def _apply_leaf(self, x, key):
+        amax = jnp.max(jnp.abs(x))
+        scale = jnp.where(amax > 0, amax / self.levels, 1.0).astype(x.dtype)
+        q = jnp.clip(_stochastic_round(x / scale, key),
+                     -self.levels, self.levels)
+        return q * scale
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantFP8Codec(TransferCodec):
+    """E4M3-style fp8 quantization with stochastic rounding.
+
+    Per-leaf normalization to `max|x|`, then each element rounds onto a
+    3-mantissa-bit grid whose exponent is clipped to the e4m3 dynamic
+    range; dequantization rescales. Relative error per element is
+    bounded by one mantissa step (2^-3) for values inside the dynamic
+    range; values below it flush toward zero like fp8 subnormals."""
+
+    name = "quant_fp8"
+    mantissa_bits: int = 3
+    exp_min: int = -6            # e4m3 subnormal floor (pre-normalized)
+    exp_max: int = 8
+
+    @property
+    def lossy(self) -> bool:
+        return True
+
+    def wire_ratio(self, bytes_per_param: int = C.BYTES_PER_PARAM) -> float:
+        return 1.0 / bytes_per_param
+
+    def _apply_leaf(self, x, key):
+        amax = jnp.max(jnp.abs(x))
+        scale = jnp.where(amax > 0, amax, 1.0).astype(x.dtype)
+        v = x / scale            # normalized to [-1, 1]
+        mag = jnp.abs(v)
+        e = jnp.clip(jnp.floor(jnp.log2(jnp.maximum(mag, 2.0 ** -30))),
+                     self.exp_min, self.exp_max).astype(x.dtype)
+        step = jnp.exp2(e - self.mantissa_bits)
+        q = _stochastic_round(v / step, key) * step
+        return q * scale
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKSparseCodec(TransferCodec):
+    """Global top-k magnitude sparsification of the client delta.
+
+    Keeps the `frac` largest-|value| entries across the whole flattened
+    delta (kept values ship exactly; the rest zero). The wire carries
+    each survivor's full-precision value plus an `index_bytes` position,
+    so the priced ratio is ``frac * (1 + index_bytes / bytes_per_param)``
+    — index overhead is on the wire, not hidden. Ties at the threshold
+    magnitude are all kept (the mask is `|x| >= threshold`), so the
+    survivor count can exceed k by the tie multiplicity."""
+
+    name = "topk_sparse"
+    frac: float = 0.1
+    index_bytes: int = 4
+
+    def __post_init__(self):
+        if not 0.0 < self.frac <= 1.0:
+            raise ValueError(
+                f"codec {self.name!r}: frac must be in (0, 1], "
+                f"got {self.frac}")
+
+    @property
+    def lossy(self) -> bool:
+        return True
+
+    def wire_ratio(self, bytes_per_param: int = C.BYTES_PER_PARAM) -> float:
+        return self.frac * (1.0 + self.index_bytes / bytes_per_param)
+
+    def apply(self, delta, rng):
+        del rng                  # deterministic: no stochastic rounding
+        leaves, treedef = jax.tree.flatten(delta)
+        flat = jnp.concatenate([l.reshape(-1) for l in leaves])
+        k = max(1, int(round(self.frac * flat.size)))
+        thr = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        out = []
+        for l in leaves:
+            out.append(jnp.where(jnp.abs(l) >= thr, l, 0.0).astype(l.dtype))
+        return jax.tree.unflatten(treedef, out)
+
+
+# ======================================================================= #
+# Registry + the shared pricing/training helpers
+# ======================================================================= #
+CODECS: dict[str, TransferCodec] = {
+    "identity": IdentityCodec(),
+    "quant_int8": QuantInt8Codec(),
+    "quant_fp8": QuantFP8Codec(),
+    "topk_sparse": TopKSparseCodec(),
+}
+
+
+def register_codec(codec: TransferCodec, *,
+                   overwrite: bool = False) -> TransferCodec:
+    """Add a codec to the open registry (duplicate names refused unless
+    `overwrite=True`). Returns `codec` so registration can inline."""
+    if codec.name in CODECS and not overwrite:
+        raise ValueError(
+            f"codec {codec.name!r} is already registered; pass "
+            "overwrite=True to replace it")
+    CODECS[codec.name] = codec
+    return codec
+
+
+def get_codec(codec: str | TransferCodec | None) -> TransferCodec:
+    """Resolve a registry name (or pass a TransferCodec through; None is
+    the identity). Unknown names raise a KeyError listing the registered
+    vocabulary — never a bare deep-sweep KeyError."""
+    if codec is None:
+        return CODECS["identity"]
+    if isinstance(codec, TransferCodec):
+        return codec
+    if codec not in CODECS:
+        raise KeyError(
+            f"unknown codec {codec!r}; registered codecs: {codec_names()}")
+    return CODECS[codec]
+
+
+def codec_names() -> list[str]:
+    """Sorted names of every registered codec."""
+    return sorted(CODECS)
+
+
+def round_trip_bytes(codec: TransferCodec | None, hw) -> float:
+    """The ONE up+down wire-cost expression for a direct (no-relay)
+    round trip: full-precision download + codec-priced uplink. Shared by
+    `core.selection`, the engine's async feed, and the batched lockstep
+    planner, so the three consumers cannot drift. With no codec this is
+    exactly the seed's ``2.0 * hw.model_bytes``."""
+    if codec is None:
+        return 2.0 * hw.model_bytes
+    return float(hw.model_bytes) + codec.wire_bytes(
+        hw.model_bytes, getattr(hw, "bytes_per_param", C.BYTES_PER_PARAM))
+
+
+def client_roundtrip(codec: TransferCodec):
+    """Per-client lossy round trip for the training paths.
+
+    Returns ``one(params, anchor, rng) -> params`` that reconstructs the
+    client's parameters as the server would after decode: delta against
+    the client's anchor, `codec.apply` on the delta (keyed off the
+    client's own training rng), anchor + lossy delta. vmap over the
+    client axis (and again over scenarios in the batched sweep)."""
+
+    def one(params, anchor, rng):
+        delta = jax.tree.map(lambda p, a: p - a, params, anchor)
+        lossy = codec.apply(delta, rng)
+        return jax.tree.map(lambda a, d: a + d, anchor, lossy)
+
+    return one

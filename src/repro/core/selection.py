@@ -177,15 +177,19 @@ def _plan_for(
     rx_start, rx_end, train_start, train_end, epochs, earliest_return = prefix
 
     # --- choose the return path -----------------------------------------
+    # The default up+down cost is the ONE shared round-trip expression
+    # (full-precision download + codec-priced uplink); routed returns
+    # replace the uplink term with the route's per-leg wire bytes.
     relay = -1
     relay_path: tuple[int, ...] = ()
     isl_hops = 0
-    comm_bytes = 2.0 * hw.model_bytes
+    comm_bytes = hw.round_trip_bytes
     if plan is not None:
-        # Contact-graph routing: relayed uploads pay ISL transfer + wait.
+        # Contact-graph routing: relayed uploads pay ISL transfer + wait,
+        # each leg carrying the codec-encoded return.
         if route is _UNROUTED:
             route = earliest_arrival(plan, k, earliest_return,
-                                     hw.model_bytes,
+                                     hw.uplink_bytes,
                                      max_hops=max_hops if use_relay else 0)
         if route is None:
             return None
@@ -210,7 +214,7 @@ def _plan_for(
         if ret is None:
             return None
         tx_start = ret[0]
-        tx_end = tx_start + hw.tx_time_s
+        tx_end = tx_start + hw.ul_time_s    # return leg: codec-priced
         departure = tx_start
     if strategy.work_mode is ClientWorkMode.UNTIL_CONTACT:
         # SGD realism: the *number of gradient epochs* is capped by the
@@ -270,7 +274,7 @@ class BaseSelector:
             if cands:
                 routes = batch_earliest_arrival(
                     plan, cands, [prefixes[k][5] for k in cands],
-                    hw.model_bytes,
+                    hw.uplink_bytes,
                     max_hops=self.max_hops if self.use_relay else 0)
                 for k, route in zip(cands, routes):
                     p = _plan_for(k, t, aw, strategy, hw, local_epochs,

@@ -45,11 +45,18 @@ class SpaceifiedAlgorithm:
     min_epochs: int = 0        # SchedV2 floor (UNTIL_CONTACT regime)
     buffer_frac: float = 1.0   # FedBuff: D = max(1, round(buffer_frac * c))
     isl: bool = False          # plan against an ISL-aware ContactPlan
+    # Uplink transfer codec (`repro.comms.codec` registry name):
+    # "identity" keeps the seed's full-precision symmetric pricing
+    # bitwise; lossy codecs compress the client's return on the wire
+    # AND on the training path (the engine applies the lossy delta).
+    codec: str = "identity"
 
     def __post_init__(self):
         # Knob validation at construction: a bad knob otherwise
         # surfaces rounds deep in a sweep as a shape error or a
         # silently empty buffer.
+        from repro.comms.codec import get_codec
+        get_codec(self.codec)   # unknown codec: KeyError w/ vocabulary
         if not 0.0 < self.buffer_frac <= 1.0:
             raise ValueError(
                 f"algorithm {self.name!r}: buffer_frac must be in (0, 1], "
@@ -77,13 +84,18 @@ def spaceify(strategy: Strategy, *, schedule: bool = False,
              intracc: bool = False, isl: bool = False, min_epochs: int = 0,
              local_epochs: int = 5, name: str | None = None,
              buffer_frac: float = 1.0,
-             max_hops: int = 3) -> SpaceifiedAlgorithm:
+             max_hops: int = 3,
+             codec: str = "identity") -> SpaceifiedAlgorithm:
     """Adapt any terrestrial `Strategy` for orbital deployment.
 
     `isl=True` makes the simulator compile a `ContactPlan` (ground passes
     + ISL contact windows) and plan itineraries against it: transfer times
     follow per-window achievable rates and relays become real (bounded at
     `max_hops` store-and-forward legs).
+
+    `codec` names a `repro.comms.codec` registry entry pricing (and, for
+    lossy codecs, transforming) the client's uplink; non-identity codecs
+    suffix the derived name (`fedavg_quant_int8`).
     """
     if intracc:
         selector = IntraCCSelector(schedule=schedule, max_hops=max_hops)
@@ -96,6 +108,8 @@ def spaceify(strategy: Strategy, *, schedule: bool = False,
         suffix += "_v2"
     if isl:
         suffix += "_isl"
+    if codec != "identity":
+        suffix += f"_{codec}"
     return SpaceifiedAlgorithm(
         name=name or strategy.name + suffix,
         strategy=strategy,
@@ -104,6 +118,7 @@ def spaceify(strategy: Strategy, *, schedule: bool = False,
         min_epochs=min_epochs,
         buffer_frac=buffer_frac,
         isl=isl,
+        codec=codec,
     )
 
 

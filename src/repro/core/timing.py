@@ -24,6 +24,16 @@ class HardwareModel:
     # millions of epochs between passes. The paper's Flower runs bound local
     # work the same way (variable but finite epochs).
     max_local_epochs: int = 100
+    # Full-precision wire width, bytes/parameter (one source of truth:
+    # `repro.orbits.constants.BYTES_PER_PARAM`; the workload's dtype-
+    # derived width flows in via `for_workload`). Only consulted by the
+    # codec's wire pricing — `model_bytes` already bakes the width in.
+    bytes_per_param: int = C.BYTES_PER_PARAM
+    # Uplink transfer codec (`repro.comms.codec.TransferCodec`): prices
+    # the client's *return* transfer (the server's model download always
+    # ships full precision). None keeps the seed's symmetric pricing —
+    # bitwise identical to the identity codec.
+    codec: object | None = None
 
     @property
     def epoch_time_s(self) -> float:
@@ -31,8 +41,41 @@ class HardwareModel:
 
     @property
     def tx_time_s(self) -> float:
-        """One model transfer (either direction) over the telemetry link."""
+        """One full-precision model transfer (the download direction)
+        over the telemetry link."""
         return (self.model_bytes * 8) / (self.link_mbps * 1e6)
+
+    @property
+    def uplink_bytes(self) -> float:
+        """Bytes one client return (uplink) puts on the wire, after the
+        codec: == `model_bytes` with no codec (seed back-compat)."""
+        if self.codec is None:
+            return float(self.model_bytes)
+        return self.codec.wire_bytes(self.model_bytes, self.bytes_per_param)
+
+    @property
+    def ul_time_s(self) -> float:
+        """One codec-priced uplink at the constant telemetry rate —
+        == `tx_time_s` bit for bit with no codec."""
+        if self.codec is None:
+            return self.tx_time_s
+        return self.tx_time_for(n_bytes=self.uplink_bytes)
+
+    def ul_time_for(self, rate_bps: float | None = None) -> float:
+        """Codec-priced uplink time at a window's achievable rate (the
+        uplink twin of `tx_time_for(rate_bps=...)`)."""
+        return self.tx_time_for(
+            n_bytes=None if self.codec is None else self.uplink_bytes,
+            rate_bps=rate_bps)
+
+    @property
+    def round_trip_bytes(self) -> float:
+        """Direct (no-relay) round-trip wire cost: full-precision
+        download + codec-priced uplink. The one shared expression behind
+        selection/engine/batched comm accounting — see
+        `repro.comms.codec.round_trip_bytes`."""
+        from repro.comms.codec import round_trip_bytes
+        return round_trip_bytes(self.codec, self)
 
     def tx_time_for(self, n_bytes: float | None = None,
                     rate_bps: float | None = None) -> float:
@@ -58,7 +101,8 @@ class HardwareModel:
     @classmethod
     def for_workload(cls, workload, *, gflops: float | None = None,
                      link_mbps: float | None = None,
-                     max_local_epochs: int | None = None) -> "HardwareModel":
+                     max_local_epochs: int | None = None,
+                     codec=None) -> "HardwareModel":
         """Price a `repro.core.workload.Workload` on the paper's satellite.
 
         `model_bytes` / `epoch_mflops` come from the workload's derived
@@ -73,7 +117,8 @@ class HardwareModel:
         from repro.core.workload import get_workload
         wl = get_workload(workload)
         kwargs = dict(epoch_mflops=float(wl.epoch_mflops),
-                      model_bytes=int(wl.model_bytes))
+                      model_bytes=int(wl.model_bytes),
+                      bytes_per_param=int(wl.bytes_per_param))
         if gflops is None:
             gflops = wl.gflops
         if link_mbps is None:
@@ -84,6 +129,9 @@ class HardwareModel:
             kwargs["link_mbps"] = link_mbps
         if max_local_epochs is not None:
             kwargs["max_local_epochs"] = max_local_epochs
+        if codec is not None:
+            from repro.comms.codec import get_codec
+            kwargs["codec"] = get_codec(codec)
         return cls(**kwargs)
 
 
@@ -91,11 +139,21 @@ def lm_hardware_model(n_params: int, flops_per_step: float,
                       steps_per_epoch: int = 1,
                       gflops: float = 275e3,       # one v5e pod-slice client
                       link_mbps: float = 580.0,
-                      bytes_per_param: int = 2) -> HardwareModel:
-    """Price an assigned LM architecture as a constellation client."""
+                      bytes_per_param: int = C.BYTES_PER_PARAM
+                      ) -> HardwareModel:
+    """Price an assigned LM architecture as a constellation client.
+
+    `bytes_per_param` defaults to the shared full-precision width
+    (`repro.orbits.constants.BYTES_PER_PARAM`, f32) — the same source of
+    truth as `Workload.bytes_per_param`, which derives the actual width
+    from the architecture's dtype (pass 2 here for f16/bf16 configs).
+    Historically this helper defaulted to 2 while the workload layer
+    defaulted to 4; one constant now owns the number.
+    """
     return HardwareModel(
         gflops=gflops,
         epoch_mflops=flops_per_step * steps_per_epoch / 1e6,
         link_mbps=link_mbps,
         model_bytes=n_params * bytes_per_param,
+        bytes_per_param=bytes_per_param,
     )

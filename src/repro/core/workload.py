@@ -114,7 +114,12 @@ class Workload:
     # `train_flops_per_param` prices. 0 for dense nets.
     inactive_params: int = 0
     samples_per_epoch: int = 275         # nominal local-epoch size
-    bytes_per_param: int = 4             # f32 on the wire
+    # Full-precision wire width. ONE source of truth for the default —
+    # `repro.orbits.constants.BYTES_PER_PARAM` (f32), shared with
+    # `HardwareModel`/`lm_hardware_model`; `lm_workload` overrides it
+    # with the architecture dtype's width, and `model_bytes_override`
+    # wins over both (tests/test_codec.py pins the precedence).
+    bytes_per_param: int = C.BYTES_PER_PARAM
     # Calibration overrides (paper constants). When set they win over the
     # derived numbers — `femnist_mlp` uses them to stay bitwise identical
     # to the seed's HardwareModel defaults.

@@ -141,7 +141,7 @@ def make_fl_round_step(cfg=None, mesh=None, lr: float = 1e-3,
 
 def make_mesh_round_step(loss_fn, mesh, *, lr: float, batch_size: int,
                          max_steps: int, server_lr: float = 1.0,
-                         axis: str | None = None):
+                         axis: str | None = None, codec=None):
     """Mesh-native ClientUpdate + aggregation with the simulator contract.
 
     Returns ``fn(global_params, anchors, x, y, n_valid, steps, weights,
@@ -155,10 +155,19 @@ def make_mesh_round_step(loss_fn, mesh, *, lr: float, batch_size: int,
     model broadcast for the sync barrier; per-client historical versions
     for FedBuff) and doubles as each pod's initial parameters, mirroring
     `ConstellationSim._run_clients`.
+
+    `codec` (a lossy `repro.comms.codec.TransferCodec`, or None) replays
+    each pod's uplink on the wire: the aggregation sees anchor +
+    codec.apply(delta) instead of the raw client return — same per-pod
+    RNG stream as the updater, so the host path decodes identically.
     """
     axis = axis or _pod_axis(mesh)
     vcu = vmapped_client_update(loss_fn, lr=lr, batch_size=batch_size,
                                 max_steps=max_steps, anchored=True)
+    rt = None
+    if codec is not None and codec.lossy:
+        from repro.comms.codec import client_roundtrip
+        rt = jax.vmap(client_roundtrip(codec), in_axes=(0, 0, 0))
 
     def shard_body(global_params, anchors, x, y, n, steps, weights,
                    staleness, prox_mu, rngs):
@@ -166,6 +175,8 @@ def make_mesh_round_step(loss_fn, mesh, *, lr: float, batch_size: int,
         # pods; the client math is the same vmapped function the host
         # path jits, so the two execution modes agree client for client.
         client_params = vcu(anchors, anchors, x, y, n, steps, prox_mu, rngs)
+        if rt is not None:
+            client_params = rt(client_params, anchors, rngs)
         w = weights * staleness_discount(staleness)
         return masked_delta_allreduce(global_params, client_params, w,
                                       axis, server_lr=server_lr)

@@ -24,3 +24,10 @@ MODEL_BYTES = 186_000           # 186 KB over telemetry
 EPOCH_MFLOPS = 98.0             # per local epoch
 CLIENT_GFLOPS = 40.0            # SpaceCloud iX5-106
 LINK_MBPS = 580.0               # Planet Dove telemetry
+# Full-precision wire width [bytes/parameter] — THE default everywhere a
+# transfer is priced per parameter (f32; the paper's 186 KB / 47k params
+# ~ 4 B/param). `Workload.bytes_per_param` derives a workload's actual
+# width from its dtype (LM configs may ship f16/bf16 = 2), and
+# `Workload.model_bytes_override` wins over both; `repro.comms.codec`
+# prices compressed uplinks as ratios against this width.
+BYTES_PER_PARAM = 4

@@ -161,7 +161,11 @@ def _plan_sync_batched(states: list[_PlanState], table: WindowTable) -> None:
             E=alg.local_epochs,
             schedule=alg.selector.schedule,
             c=alg.strategy.round_size(min(cfg.clients_per_round, st.K)),
-            comm_b=2.0 * hw.model_bytes,
+            # Shared round-trip pricing: full-precision download +
+            # codec-priced uplink (`ul` IS `tx` for the identity codec,
+            # so seed lanes stay bitwise).
+            ul=hw.ul_time_s,
+            comm_b=hw.round_trip_bytes,
         )
 
     while True:
@@ -220,7 +224,7 @@ def _plan_sync_batched(states: list[_PlanState], table: WindowTable) -> None:
         rvalid = j < counts
         s_r, _ = win(rows, np.where(rvalid, j, 0))
         tx_s = np.maximum(s_r, er)
-        tx_e = tx_s + tx_l
+        tx_e = tx_s + lane("ul")   # return leg: codec-priced uplink
         valid &= rvalid
         # UNTIL_CONTACT epoch count: whole epochs in [train_start,
         # departure), duty-cycle capped, min-epoch floored, `or 1`.
@@ -326,8 +330,18 @@ class BatchedSweep:
                     "aggregate() outside the weighted-average / "
                     "staleness-discounted-delta family; the batched "
                     "masked-delta aggregation would bypass it")
+            # One codec per training batch: the codec transform is baked
+            # into the single compiled round slab (a per-lane codec would
+            # need one compile per codec anyway — sweep them as batches).
+            if self.train and sim.codec.name != ref.codec.name:
+                raise ValueError(
+                    f"scenario {name!r} uses codec {sim.codec.name!r} but "
+                    f"the batch compiles {ref.codec.name!r}; sweep one "
+                    "codec per training batch")
+        self.codec = ref.codec
         self._updaters: dict[tuple[int, int], object] = {}
         self._agg = None
+        self._codec_rt = None
 
     # ------------------------------------------------------------------ #
     # Phase 1: host-side per-scenario planning                           #
@@ -389,6 +403,18 @@ class BatchedSweep:
             self._agg = jax.jit(jax.vmap(weighted_delta_update,
                                          in_axes=(0, 0, 0, 0, 0)))
         return self._agg
+
+    def _codec_roundtrip(self):
+        """Jitted (scenario, client)-vmapped codec round-trip — the same
+        per-client `client_roundtrip` the loop engine and mesh step apply,
+        lifted over the batch axis. Padded clients and finished scenarios
+        decode garbage that the zero-weight mask then discards."""
+        if self._codec_rt is None:
+            from repro.comms.codec import client_roundtrip
+            one = client_roundtrip(self.codec)
+            self._codec_rt = jax.jit(jax.vmap(
+                jax.vmap(one, in_axes=(0, 0, 0)), in_axes=(0, 0, 0)))
+        return self._codec_rt
 
     def run(self) -> list[SimResult]:
         planned, twins = self.plan()
@@ -529,6 +555,12 @@ class BatchedSweep:
                                  jnp.asarray(y), jnp.asarray(nv),
                                  jnp.asarray(steps), prox,
                                  jnp.asarray(rngs))
+                    if self.codec.lossy:
+                        # Same per-client codec round-trip as the loop
+                        # engine (same rng keys: split(sub, n) rows), so
+                        # the decoded returns match client for client.
+                        out = self._codec_roundtrip()(
+                            out, anchors, jnp.asarray(rngs))
                     if obs_enabled():
                         jax.block_until_ready(out)
                 with span("sim.aggregate", mode="batched",

@@ -193,6 +193,22 @@ class ConstellationSim:
             self.hw = HardwareModel.for_workload(self.workload)
         else:
             self.hw = HardwareModel()
+        # Uplink transfer codec: the algorithm's validated knob resolves
+        # to a registry codec and rides inside the HardwareModel so every
+        # wire-pricing consumer (selection, async feed, batched planner)
+        # prices encoded uplinks. "identity" leaves the HardwareModel
+        # untouched — the seed's exact pricing path, bit for bit. A
+        # caller-supplied `hw` that already carries a codec keeps it
+        # unless the algorithm names a lossy one.
+        from repro.comms.codec import get_codec
+        self.codec = get_codec(getattr(algorithm, "codec", "identity"))
+        if self.codec.name != "identity":
+            self.hw = dataclasses.replace(
+                self.hw, codec=self.codec,
+                bytes_per_param=int(self.workload.bytes_per_param))
+        elif self.hw.codec is not None:
+            self.codec = self.hw.codec
+        self._codec_fns: dict[bool, object] = {}
         self.data = data
         self.init_fn = self.workload.init_fn
         if access is not None:
@@ -295,7 +311,8 @@ class ConstellationSim:
                 self.workload.loss_fn, mesh, lr=self.cfg.lr,
                 batch_size=self.cfg.batch_size, max_steps=bound,
                 server_lr=getattr(self.alg.strategy, "server_lr", 1.0),
-                axis=self.workload.mesh_axis))
+                axis=self.workload.mesh_axis,
+                codec=self.codec if self.codec.lossy else None))
         return self._mesh_steps[key]
 
     @staticmethod
@@ -413,6 +430,19 @@ class ConstellationSim:
                 jax.block_until_ready(out)
         return out
 
+    def _codec_roundtrip(self, anchored: bool):
+        """Jitted vmapped encode/decode of the stacked client returns.
+
+        Each client's return is re-expressed as anchor + codec.apply(delta)
+        — exactly what the server receives after a lossy uplink. Cached
+        per anchor layout (broadcast global vs stacked per-client)."""
+        from repro.comms.codec import client_roundtrip
+        if anchored not in self._codec_fns:
+            self._codec_fns[anchored] = jax.jit(jax.vmap(
+                client_roundtrip(self.codec),
+                in_axes=(0, 0 if anchored else None, 0)))
+        return self._codec_fns[anchored]
+
     def _train_round(self, global_params, ks: list[int], epochs: list[int],
                      rng, *, weights, staleness, anchors=None):
         """Client updates + aggregation for one round (or buffer flush),
@@ -423,6 +453,22 @@ class ConstellationSim:
                 staleness=staleness, anchors=anchors)
         stacked = self._run_clients(global_params, ks, epochs, rng,
                                     anchors=anchors)
+        if self.codec.lossy:
+            # The server only ever sees the codec round-trip of each
+            # client's delta — same per-client RNG stream as the updater
+            # (split(rng, len(ks)); the codec folds in its own tag), so
+            # host / mesh / batched paths share the codec randomness.
+            anchored = anchors is not None
+            rngs = jax.random.split(rng, len(ks))
+            rt = self._codec_roundtrip(anchored)
+            decoded = rt(stacked, anchors if anchored else global_params,
+                         rngs)
+            if obs_enabled():
+                err = sum(float(jnp.sum((a - b) ** 2))
+                          for a, b in zip(jax.tree.leaves(stacked),
+                                          jax.tree.leaves(decoded)))
+                count("comms.codec_error", float(np.sqrt(err)))
+            stacked = decoded
         with span("sim.aggregate", strategy=self.alg.strategy.name,
                   clients=len(ks)):
             out = self.alg.strategy.aggregate(
@@ -441,12 +487,24 @@ class ConstellationSim:
 
         `do_eval` is the eval *cadence* (this round hits the eval slot);
         accuracy is only computed when the run trains."""
+        # Wire savings vs full-precision returns over the same legs:
+        # (1 + hops) * model_bytes uplink + model_bytes download, minus
+        # what was actually billed. IEEE-exact 0.0 for the identity codec
+        # (every term is the same sum of model_bytes).
+        mb = float(self.hw.model_bytes)
+        wire_saved = sum((1.0 + h) * mb + mb - cb
+                         for h, cb in zip(relay_hops, comms_bytes))
+        if obs_enabled():
+            # Encoded uplink bytes actually on the wire this round
+            # (billed bytes minus the full-precision download leg).
+            count("comms.encoded_bytes", sum(cb - mb for cb in comms_bytes))
         rec = RoundRecord(
             idx=len(rounds), t_start=t_start, t_end=t_end,
             participants=participants, epochs=epochs, idle_s=idle_s,
             compute_s=compute_s, comm_s=comm_s, relays=relays,
             staleness=staleness, relay_hops=relay_hops,
-            comms_bytes=comms_bytes, execution=self.execution,
+            comms_bytes=comms_bytes, wire_bytes_saved=wire_saved,
+            execution=self.execution,
         )
         if self.cfg.record_params and global_params is not None:
             self._params_hist.append(jax.device_get(global_params))
@@ -679,9 +737,11 @@ class ConstellationSim:
                 return
             epochs = max(1, hw.epochs_between(rx_end, nxt[0]))
             train_span = nxt[0] - rx_end   # continuous on-board training
-            tx_end = nxt[0] + hw.tx_time_s
+            # Full-precision download leg + codec-priced upload leg
+            # (`ul_time_s` IS `tx_time_s` for the identity codec).
+            tx_end = nxt[0] + hw.ul_time_s
             heapq.heappush(heap, (tx_end, k, ver, epochs, w[0], train_span,
-                                  2 * hw.tx_time_s))
+                                  hw.tx_time_s + hw.ul_time_s))
 
         for k in range(K):
             schedule_cycle(k, 0.0, 0)
@@ -753,7 +813,7 @@ class ConstellationSim:
                     relays=[-1] * len(buffer),
                     staleness=staleness.tolist(),
                     relay_hops=[0] * len(buffer),
-                    comms_bytes=[2.0 * hw.model_bytes] * len(buffer),
+                    comms_bytes=[hw.round_trip_bytes] * len(buffer),
                     do_eval=(len(rounds) % cfg.eval_every == 0),
                 )
                 last_agg_t = t_agg

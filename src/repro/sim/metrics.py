@@ -22,6 +22,9 @@ class RoundRecord:
     # on the wire per participant (model download + every return leg).
     relay_hops: list[int] = dataclasses.field(default_factory=list)
     comms_bytes: list[float] = dataclasses.field(default_factory=list)
+    # Wire bytes the uplink codec saved this round vs full-precision
+    # returns over the same legs (0.0 for the identity codec — exactly).
+    wire_bytes_saved: float = 0.0
     # How the round's client updates executed: "host" (vmapped reference
     # path) or "mesh" (cluster-as-collective shard_map + masked psum).
     execution: str = "host"
@@ -93,6 +96,10 @@ class SimResult:
     def total_comms_bytes(self) -> float:
         return float(sum(r.total_comms_bytes for r in self.rounds))
 
+    @property
+    def total_wire_bytes_saved(self) -> float:
+        return float(sum(r.wire_bytes_saved for r in self.rounds))
+
     def time_to_accuracy(self, target: float) -> float | None:
         """Simulation seconds until `target` eval accuracy (None if never)."""
         for _, t, a in self.accuracy_curve:
@@ -114,4 +121,5 @@ class SimResult:
             "total_days": round(self.total_time_s / 86400, 2),
             "relay_hops": self.total_relay_hops,
             "comms_mb": round(self.total_comms_bytes / 1e6, 3),
+            "wire_saved_mb": round(self.total_wire_bytes_saved / 1e6, 3),
         }

@@ -1,0 +1,398 @@
+"""TransferCodec: wire pricing, lossy round trips, and engine integration.
+
+Covers the compressed-uplink layer end to end:
+
+  * registry semantics (get/register/vocabulary errors);
+  * wire math — identity prices exactly the seed's bytes, quantizers
+    shrink by 1/bytes_per_param, top-k pays its index overhead;
+  * `bytes_per_param` has ONE source of truth (`repro.orbits.constants`)
+    across Workload / HardwareModel / lm_hardware_model, and
+    `model_bytes_override` still wins over any derived size;
+  * apply() error bounds — int8/fp8 stochastic quantization is bounded
+    per element (seeded checks + hypothesis property twins, skip-gated
+    when hypothesis isn't installed), top-k keeps the k largest
+    magnitudes bitwise and zeroes the rest;
+  * the engine: an identity-codec run is bitwise the default run, a
+    quant_int8 run bills fewer wire bytes with wire_bytes_saved > 0 and
+    a measured accuracy, and the selector/async/batched consumers all
+    price through the one shared `round_trip_bytes` expression;
+  * loop-vs-batched parity under a lossy codec (timing bitwise,
+    accuracy exact on CPU, 1e-5 envelope contractually).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.comms.codec import (
+    CODECS,
+    IdentityCodec,
+    QuantFP8Codec,
+    QuantInt8Codec,
+    TopKSparseCodec,
+    TransferCodec,
+    client_roundtrip,
+    codec_names,
+    get_codec,
+    register_codec,
+    round_trip_bytes,
+)
+from repro.core.spaceify import get_algorithm, spaceify
+from repro.core.timing import HardwareModel, lm_hardware_model
+from repro.core.workload import Workload, get_workload
+from repro.orbits import constants as C
+from repro.orbits.stations import station_subnetwork
+from repro.orbits.walker import WalkerStar
+from repro.sim.engine import ConstellationSim, SimConfig
+
+
+# --------------------------------------------------------------------- #
+# Registry
+# --------------------------------------------------------------------- #
+def test_registry_contents():
+    assert codec_names() == sorted(
+        ["identity", "quant_int8", "quant_fp8", "topk_sparse"])
+    assert get_codec(None).name == "identity"
+    assert get_codec("quant_int8") is CODECS["quant_int8"]
+    passthrough = TopKSparseCodec(frac=0.5)
+    assert get_codec(passthrough) is passthrough
+
+
+def test_unknown_codec_lists_vocabulary():
+    with pytest.raises(KeyError, match="registered codecs"):
+        get_codec("gzip")
+
+
+def test_register_refuses_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        register_codec(QuantInt8Codec())
+    # overwrite=True replaces; restore the stock entry afterwards.
+    stock = CODECS["quant_int8"]
+    try:
+        mine = register_codec(QuantInt8Codec(levels=63), overwrite=True)
+        assert CODECS["quant_int8"] is mine
+    finally:
+        register_codec(stock, overwrite=True)
+
+
+def test_topk_frac_validated():
+    with pytest.raises(ValueError, match="frac"):
+        TopKSparseCodec(frac=0.0)
+    with pytest.raises(ValueError, match="frac"):
+        TopKSparseCodec(frac=1.5)
+
+
+def test_codecs_are_hashable_frozen():
+    # They ride inside the frozen HardwareModel: hashability is load-bearing.
+    assert {IdentityCodec(), QuantInt8Codec(), QuantFP8Codec(),
+            TopKSparseCodec()}
+
+
+# --------------------------------------------------------------------- #
+# Wire pricing
+# --------------------------------------------------------------------- #
+def test_identity_wire_bytes_is_model_bytes():
+    mb = C.MODEL_BYTES
+    assert IdentityCodec().wire_bytes(mb) == float(mb)
+
+
+def test_quant_wire_ratio():
+    assert QuantInt8Codec().wire_ratio(4) == 0.25
+    assert QuantFP8Codec().wire_ratio(2) == 0.5
+
+
+def test_topk_wire_ratio_pays_index_overhead():
+    ck = TopKSparseCodec(frac=0.1, index_bytes=4)
+    assert ck.wire_ratio(4) == pytest.approx(0.1 * (1 + 4 / 4))
+    # Index overhead hurts more when params are narrow on the wire.
+    assert ck.wire_ratio(2) > ck.wire_ratio(4)
+
+
+def test_round_trip_bytes_identity_is_seed_expression():
+    hw = HardwareModel()
+    # IEEE-exact: the shared helper with no codec IS 2.0 * model_bytes.
+    assert round_trip_bytes(None, hw) == 2.0 * hw.model_bytes
+    assert hw.round_trip_bytes == 2.0 * hw.model_bytes
+    assert hw.ul_time_s == hw.tx_time_s
+    assert hw.uplink_bytes == float(hw.model_bytes)
+
+
+def test_round_trip_bytes_codec_prices_uplink_only():
+    hw = dataclasses.replace(HardwareModel(), codec=CODECS["quant_int8"],
+                             bytes_per_param=4)
+    assert hw.uplink_bytes == hw.model_bytes * 0.25
+    assert hw.round_trip_bytes == hw.model_bytes * 1.25
+    assert hw.ul_time_s == pytest.approx(hw.tx_time_s * 0.25)
+
+
+def test_encode_bytes_prices_concrete_tree():
+    tree = {"w": jnp.zeros((10, 10)), "b": jnp.zeros((10,))}
+    assert IdentityCodec().encode_bytes(tree, 4) == 110 * 4.0
+    assert QuantInt8Codec().encode_bytes(tree, 4) == 110.0
+
+
+# --------------------------------------------------------------------- #
+# bytes_per_param: one source of truth + override precedence
+# --------------------------------------------------------------------- #
+def test_bytes_per_param_single_source_of_truth():
+    assert C.BYTES_PER_PARAM == 4
+    assert Workload.__dataclass_fields__["bytes_per_param"].default \
+        == C.BYTES_PER_PARAM
+    assert HardwareModel.__dataclass_fields__["bytes_per_param"].default \
+        == C.BYTES_PER_PARAM
+    # The historical timing.py default of 2 is reconciled: an LM hardware
+    # model derives its width from the same constant unless told otherwise.
+    assert lm_hardware_model(n_params=1000, flops_per_step=1e6) \
+        .bytes_per_param == C.BYTES_PER_PARAM
+
+
+def test_model_bytes_override_beats_bytes_per_param():
+    # femnist_mlp pins the paper's 186 kB even though n_params * 4 differs;
+    # the codec wire math must scale that override, never recompute it.
+    wl = get_workload("femnist_mlp")
+    assert wl.model_bytes == C.MODEL_BYTES
+    hw = HardwareModel.for_workload(wl, codec="quant_int8")
+    assert hw.model_bytes == C.MODEL_BYTES
+    assert hw.uplink_bytes == C.MODEL_BYTES / 4
+    # And the derived (no-override) path really derives from the width.
+    wl2 = dataclasses.replace(wl, model_bytes_override=None,
+                              bytes_per_param=2)
+    assert HardwareModel.for_workload(wl2).model_bytes \
+        == wl2.n_params * 2
+
+
+# --------------------------------------------------------------------- #
+# apply(): lossy round-trip error bounds
+# --------------------------------------------------------------------- #
+def _tree(seed: int, scale: float = 1.0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {"w": jax.random.normal(k1, (32, 16)) * scale,
+            "b": jax.random.normal(k2, (16,)) * scale}
+
+
+def test_identity_apply_returns_same_arrays():
+    t = _tree(0)
+    out = IdentityCodec().apply(t, jax.random.PRNGKey(1))
+    assert out is t          # not even a copy
+
+
+def test_int8_error_bounded_by_one_step():
+    t = _tree(1)
+    out = QuantInt8Codec().apply(t, jax.random.PRNGKey(2))
+    for k in t:
+        step = float(jnp.max(jnp.abs(t[k]))) / 127
+        err = float(jnp.max(jnp.abs(out[k] - t[k])))
+        assert err <= step * (1 + 1e-6), k
+
+
+def test_int8_stochastic_rounding_is_deterministic_per_key():
+    t = _tree(2)
+    a = QuantInt8Codec().apply(t, jax.random.PRNGKey(3))
+    b = QuantInt8Codec().apply(t, jax.random.PRNGKey(3))
+    c = QuantInt8Codec().apply(t, jax.random.PRNGKey(4))
+    assert all(bool(jnp.array_equal(a[k], b[k])) for k in t)
+    assert any(not bool(jnp.array_equal(a[k], c[k])) for k in t)
+
+
+def test_fp8_relative_error_bounded():
+    t = _tree(3)
+    out = QuantFP8Codec().apply(t, jax.random.PRNGKey(5))
+    for k in t:
+        amax = float(jnp.max(jnp.abs(t[k])))
+        err = np.asarray(jnp.abs(out[k] - t[k]))
+        mag = np.asarray(jnp.abs(t[k]))
+        # One mantissa step (2^-3) of each element's binade, with the
+        # subnormal flush floor at 2^-6 of the leaf max.
+        bound = np.maximum(mag, amax * 2.0 ** -6) * 2.0 ** -3 * (1 + 1e-6)
+        assert (err <= bound).all(), k
+
+
+def test_zero_tree_survives_quantization():
+    t = {"w": jnp.zeros((8, 8))}
+    for ck in (QuantInt8Codec(), QuantFP8Codec(), TopKSparseCodec()):
+        out = ck.apply(t, jax.random.PRNGKey(0))
+        assert not bool(jnp.any(out["w"])), ck.name
+
+
+def test_topk_keeps_largest_magnitudes_exactly():
+    t = _tree(6)
+    frac = 0.25
+    out = TopKSparseCodec(frac=frac).apply(t, jax.random.PRNGKey(0))
+    flat = np.concatenate([np.asarray(t[k]).ravel() for k in t])
+    oflat = np.concatenate([np.asarray(out[k]).ravel() for k in t])
+    k = max(1, int(round(frac * flat.size)))
+    thr = np.sort(np.abs(flat))[-k]
+    kept = np.abs(flat) >= thr
+    # Survivors ship bitwise; everything else is exactly zero.
+    assert (oflat[kept] == flat[kept]).all()
+    assert (oflat[~kept] == 0.0).all()
+    assert kept.sum() >= k       # ties at the threshold are all kept
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(1e-4, 1e4))
+def test_int8_error_bound_property(seed, scale):
+    t = _tree(seed % 1000, scale)
+    out = QuantInt8Codec().apply(t, jax.random.PRNGKey(seed))
+    for k in t:
+        step = float(jnp.max(jnp.abs(t[k]))) / 127
+        assert float(jnp.max(jnp.abs(out[k] - t[k]))) <= step * (1 + 1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_fp8_error_bound_property(seed):
+    t = _tree(seed % 1000)
+    out = QuantFP8Codec().apply(t, jax.random.PRNGKey(seed))
+    for k in t:
+        amax = float(jnp.max(jnp.abs(t[k])))
+        err = np.asarray(jnp.abs(out[k] - t[k]))
+        mag = np.asarray(jnp.abs(t[k]))
+        bound = np.maximum(mag, amax * 2.0 ** -6) * 2.0 ** -3 * (1 + 1e-5)
+        assert (err <= bound).all()
+
+
+def test_client_roundtrip_anchors_delta():
+    anchor = _tree(7)
+    params = {k: anchor[k] + 0.01 for k in anchor}
+    one = client_roundtrip(IdentityCodec())
+    out = one(params, anchor, jax.random.PRNGKey(0))
+    for k in params:
+        assert bool(jnp.array_equal(out[k], params[k]))
+    # Lossy: the reconstruction is anchor + apply(delta), not params.
+    lossy = client_roundtrip(QuantInt8Codec())(
+        params, anchor, jax.random.PRNGKey(0))
+    for k in params:
+        d = lossy[k] - anchor[k]
+        step = float(jnp.max(jnp.abs(params[k] - anchor[k]))) / 127
+        assert float(jnp.max(jnp.abs(d - (params[k] - anchor[k])))) \
+            <= step * (1 + 1e-6)
+
+
+# --------------------------------------------------------------------- #
+# Algorithm knob + engine integration
+# --------------------------------------------------------------------- #
+def test_spaceify_codec_suffixes_name():
+    alg = spaceify(get_algorithm("fedavg").strategy, codec="quant_int8")
+    assert alg.name == "fedavg_quant_int8"
+    assert alg.codec == "quant_int8"
+    assert spaceify(get_algorithm("fedavg").strategy).codec == "identity"
+
+
+def test_spaceify_rejects_unknown_codec():
+    with pytest.raises(KeyError, match="registered codecs"):
+        spaceify(get_algorithm("fedavg").strategy, codec="gzip")
+
+
+def _sim(alg, *, train=True, rounds=3, seed=0):
+    ws = WalkerStar(2, 2)
+    stations = station_subnetwork(1)
+    cfg = SimConfig(max_rounds=rounds, horizon_s=4 * 86400.0, train=train,
+                    eval_every=2, seed=seed)
+    return ConstellationSim(ws, stations, alg, cfg=cfg,
+                            workload="femnist_mlp")
+
+
+def _record_tuple(r):
+    return (r.idx, r.t_start, r.t_end, tuple(r.participants),
+            tuple(r.epochs), tuple(r.idle_s), tuple(r.compute_s),
+            tuple(r.comm_s), tuple(r.comms_bytes), r.wire_bytes_saved,
+            r.accuracy)
+
+
+def test_identity_codec_run_is_bitwise_default():
+    base = _sim(get_algorithm("fedavg")).run()
+    ident = _sim(dataclasses.replace(get_algorithm("fedavg"),
+                                     codec="identity")).run()
+    assert [_record_tuple(r) for r in base.rounds] \
+        == [_record_tuple(r) for r in ident.rounds]
+    assert base.accuracy_curve == ident.accuracy_curve
+    assert all(r.wire_bytes_saved == 0.0 for r in base.rounds)
+
+
+def test_quant_int8_run_reduces_wire_and_measures_accuracy():
+    alg = spaceify(get_algorithm("fedavg").strategy, codec="quant_int8")
+    base = _sim(get_algorithm("fedavg")).run()
+    q = _sim(alg).run()
+    assert q.total_comms_bytes < base.total_comms_bytes
+    assert q.total_wire_bytes_saved > 0.0
+    assert q.total_comms_bytes + q.total_wire_bytes_saved \
+        == pytest.approx(base.total_comms_bytes)
+    assert 0.0 <= q.final_accuracy <= 1.0
+    assert q.summary()["wire_saved_mb"] > 0
+
+
+def test_selection_prices_through_shared_roundtrip():
+    sim = _sim(spaceify(get_algorithm("fedavg").strategy,
+                        codec="quant_int8"), train=False)
+    plans = sim.alg.selector.select(
+        sim.aw, 0.0, range(sim.constellation.n_sats), 4,
+        sim.alg.strategy, sim.hw, 5, 0)
+    assert plans
+    for p in plans:
+        assert p.comm_bytes == sim.hw.round_trip_bytes
+        # The return leg is codec-priced: shorter than the download
+        # (approx: tx_start sits at ~4e4 s, so the subtraction loses
+        # the last few bits of the 6e-4 s upload).
+        assert (p.tx_end - p.tx_start) \
+            == pytest.approx(sim.hw.ul_time_s, abs=1e-9)
+        assert sim.hw.ul_time_s < sim.hw.tx_time_s
+
+
+def test_async_feed_prices_through_shared_roundtrip():
+    alg = spaceify(get_algorithm("fedbuff").strategy,
+                   codec="quant_int8", name="fedbuff_q8")
+    res = _sim(alg, train=False).run()
+    sim = _sim(alg, train=False)
+    assert res.rounds
+    for r in res.rounds:
+        assert all(cb == sim.hw.round_trip_bytes for cb in r.comms_bytes)
+        assert r.wire_bytes_saved > 0
+
+
+def test_loop_vs_batched_parity_quant_int8():
+    from repro.sim.batched import BatchedSweep
+    alg = spaceify(get_algorithm("fedavg").strategy, codec="quant_int8",
+                   name="fedavg_q8_batch")
+    loop = _sim(alg).run()
+    batched = BatchedSweep([_sim(alg)]).run()[0]
+    for a, b in zip(loop.rounds, batched.rounds):
+        assert a.duration_s == b.duration_s
+        assert a.comms_bytes == b.comms_bytes
+        assert a.wire_bytes_saved == b.wire_bytes_saved
+    la = {i: acc for i, _, acc in loop.accuracy_curve}
+    lb = {i: acc for i, _, acc in batched.accuracy_curve}
+    assert set(la) == set(lb)
+    assert all(abs(la[i] - lb[i]) <= 1e-5 for i in la)
+
+
+def test_batched_refuses_mixed_codecs():
+    from repro.sim.batched import BatchedSweep
+    a = _sim(get_algorithm("fedavg"))
+    b = _sim(spaceify(get_algorithm("fedavg").strategy, codec="quant_fp8",
+                      name="fedavg_fp8_mix"))
+    with pytest.raises(ValueError, match="one codec per training batch"):
+        BatchedSweep([a, b])
+
+
+def test_obs_counters_emitted():
+    from repro import obs
+    alg = spaceify(get_algorithm("fedavg").strategy, codec="quant_int8",
+                   name="fedavg_q8_obs")
+    obs.enable()
+    try:
+        _sim(alg, rounds=2).run()
+        counters = obs.metrics_summary()["counters"]
+    finally:
+        obs.disable()
+    assert counters.get("comms.encoded_bytes", 0) > 0
+    assert counters.get("comms.codec_error", 0) > 0

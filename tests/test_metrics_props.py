@@ -125,6 +125,7 @@ def test_summary_rounding_and_keys():
         "total_days": round(5000.0 / 86400, 2),
         "relay_hops": 2,
         "comms_mb": 1.235,                            # round(…, 3)
+        "wire_saved_mb": 0.0,         # no codec: nothing saved, exactly
     }
 
 
